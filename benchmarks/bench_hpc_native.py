@@ -1,0 +1,39 @@
+"""Native HPC apps inside the framework (paper Figs. 19–22): the overhead of
+worker.call vs executing the same collective program natively must be ≤ ~2%.
+Stencil = LULESH/miniAMR pattern (halo ppermute); CG = AMG (Allreduce)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.apps.stencil import cg_native, stencil_native
+from repro.core import ICluster, IProperties, IWorker
+
+
+def bench(grid=(256, 128), n_cg: int = 4096, iters: int = 30):
+    w = IWorker(ICluster(IProperties()), "cpp")
+    w.load_library("repro.apps.stencil")
+    mesh, axis = w.context.comm()
+    rows = []
+
+    g = np.random.default_rng(0).normal(size=grid).astype(np.float32)
+    t_nat = timeit(lambda: stencil_native(mesh, axis, jnp.asarray(g), iters),
+                   warmup=1, iters=5)
+    df = w.parallelize(g)
+    t_fw = timeit(lambda: w.call("stencil_app", df, iters=iters)._blocks(),
+                  warmup=1, iters=5)
+    ovh = (t_fw - t_nat) / t_nat * 100
+    rows.append(row("stencil_native", t_nat, f"cell_iters/s={g.size*iters/t_nat:.2e}"))
+    rows.append(row("stencil_framework", t_fw, f"overhead_pct={ovh:.2f}"))
+
+    b = np.random.default_rng(1).normal(size=n_cg).astype(np.float32)
+    t_nat = timeit(lambda: cg_native(mesh, axis, jnp.asarray(b), iters),
+                   warmup=1, iters=5)
+    dfb = w.parallelize(b)
+    t_fw = timeit(lambda: w.call("cg_app", dfb, iters=iters)._blocks(),
+                  warmup=1, iters=5)
+    ovh = (t_fw - t_nat) / t_nat * 100
+    rows.append(row("cg_native", t_nat, f"matvecs/s={iters/t_nat:.1f}"))
+    rows.append(row("cg_framework", t_fw, f"overhead_pct={ovh:.2f}"))
+    return rows

@@ -1,0 +1,31 @@
+"""K-Means (paper Fig. 16): the iterative pattern. ignis = whole loop fused
+on the fabric (no driver evaluations, paper §3.6); spark = per-iteration
+driver round-trip. The gap widens with iteration count — exactly the
+paper's observation about many short iterations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.apps.kmeans import kmeans_driver_eval, kmeans_on_device, make_points
+
+
+def bench(n: int = 8192, d: int = 32, k: int = 16, iters: int = 20):
+    pts, _ = make_points(n, d, k, seed=0)
+    pts_dev = jnp.asarray(pts)
+    init = pts_dev[:k]
+    on_dev = jax.jit(lambda p, c: kmeans_on_device(p, c, iters))
+
+    rows = []
+    t_ignis = timeit(lambda: on_dev(pts_dev, init), warmup=1, iters=3)
+    t_spark = timeit(lambda: kmeans_driver_eval(pts_dev, init, iters), warmup=1, iters=3)
+    # correctness parity between the two execution strategies
+    a = on_dev(pts_dev, init)
+    b = kmeans_driver_eval(pts_dev, init, iters)
+    assert float(jnp.abs(a - b).max()) < 1e-3
+    rows.append(row("kmeans_ignis_fused", t_ignis, f"iters/s={iters/t_ignis:.1f}"))
+    rows.append(row("kmeans_spark_drivereval", t_spark, f"iters/s={iters/t_spark:.1f}"))
+    rows.append(row("kmeans_speedup", 0.0, f"ignis_vs_spark={t_spark/t_ignis:.2f}x"))
+    return rows

@@ -1,0 +1,43 @@
+"""Minebench (paper Figs. 13–14): chained data-/compute-intensive maps over
+real SHA-256 (map₁ merkle reduction, map₂ nonce mining).
+
+ignis mode vs spark mode (per-element pickle pipe, PySpark batch semantics),
+single-worker and the multi-worker (importData) variant — the paper's
+Python & C++ split. Pipelines are built once; timing re-evaluates the same
+DAG nodes (warm jit caches, like steady-state cluster operation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.apps.minebench import make_blocks, make_map2_fn, map1_fn
+from repro.core import ICluster, IProperties, IWorker
+
+
+def bench(n_blocks: int = 256, txs: int = 8):
+    blocks = make_blocks(n_blocks, txs)
+    map2 = make_map2_fn(iters=16, difficulty_bits=8)
+    rows = []
+    results = {}
+    for mode in ("ignis", "spark"):
+        for multi in (False, True):
+            props = IProperties({"ignis.mode": mode})
+            cluster = ICluster(props)
+            w = IWorker(cluster, "python")
+            df = w.parallelize(blocks)
+            roots = df.map(map1_fn)
+            if multi:
+                w2 = IWorker(cluster, "cpp")
+                roots = w2.import_data(roots)
+            mined = roots.map(map2)
+            t = timeit(lambda: mined.count(), warmup=1, iters=3)
+            results[(mode, multi)] = t
+            tag = "multi" if multi else "single"
+            rows.append(row(f"minebench_{mode}_{tag}", t,
+                            f"blocks/s={n_blocks/t:.1f}"))
+    sp1 = results[("spark", False)] / results[("ignis", False)]
+    sp2 = results[("spark", True)] / results[("ignis", True)]
+    rows.append(row("minebench_speedup_single", 0.0, f"ignis_vs_spark={sp1:.2f}x"))
+    rows.append(row("minebench_speedup_multiworker", 0.0, f"ignis_vs_spark={sp2:.2f}x"))
+    return rows

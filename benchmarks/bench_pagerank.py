@@ -1,0 +1,27 @@
+"""PageRank (paper Fig. 17): join/reduceByKey graph pattern on the dataflow
+layer, ignis vs spark mode, validated against the host reference."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.apps.graph import make_graph, pagerank, pagerank_reference
+from repro.core import ICluster, IProperties, IWorker
+
+
+def bench(n_vertices: int = 48, n_edges: int = 160, iters: int = 3):
+    edges = make_graph(n_vertices, n_edges, seed=0)
+    ref = pagerank_reference(edges, iters)
+    rows = []
+    res = {}
+    for mode in ("ignis", "spark"):
+        w = IWorker(ICluster(IProperties({"ignis.mode": mode})), "python")
+        pr = pagerank(w, edges, iters)
+        err = max(abs(pr[v] - ref[v]) for v in ref)
+        assert err < 1e-3, err
+        t = timeit(lambda: pagerank(w, edges, iters), warmup=0, iters=2)
+        res[mode] = t
+        rows.append(row(f"pagerank_{mode}", t, f"edges*iters/s={n_edges*iters/t:.0f}"))
+    rows.append(row("pagerank_speedup", 0.0,
+                    f"ignis_vs_spark={res['spark']/res['ignis']:.2f}x"))
+    return rows

@@ -1,0 +1,35 @@
+"""Productivity (paper Table 5): source lines added to integrate a native
+SPMD app into the framework = the @ignis_export wrapper + context parsing.
+
+Measured directly from the app sources: lines of the native program vs
+lines of its framework wrapper function.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+
+from benchmarks.common import row
+from repro.apps import minebench, stencil
+
+
+def _fn_sloc(module, fn_name: str) -> int:
+    src = inspect.getsource(getattr(module, fn_name))
+    tree = ast.parse(src.lstrip() if not src.startswith("def") and not src.startswith("@") else src)
+    node = tree.body[0]
+    return (node.end_lineno or 0) - node.lineno + 1
+
+
+def bench():
+    rows = []
+    for module, native, wrapper in [
+        (stencil, "stencil_native", "stencil_app"),
+        (stencil, "cg_native", "cg_app"),
+        (minebench, "minebench_native", "minebench_native"),
+    ]:
+        n = _fn_sloc(module, native)
+        w = _fn_sloc(module, wrapper)
+        extra = w if native != wrapper else w  # the wrapper IS the addition
+        rows.append(row(f"sloc_{native}", 0.0,
+                        f"native_sloc={n};wrapper_sloc={extra}"))
+    return rows

@@ -1,0 +1,26 @@
+"""Transitive Closure (paper Fig. 18): join/union/distinct fixed point."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.apps.graph import make_graph, tc_reference, transitive_closure
+from repro.core import ICluster, IProperties, IWorker
+
+
+def bench(n_vertices: int = 14, n_edges: int = 26):
+    edges = make_graph(n_vertices, n_edges, seed=3)
+    exp = tc_reference(edges)
+    rows = []
+    res = {}
+    for mode in ("ignis", "spark"):
+        w = IWorker(ICluster(IProperties({"ignis.mode": mode})), "python")
+        tc = transitive_closure(w, edges)
+        got = {(int(np.asarray(a)), int(np.asarray(b))) for a, b in tc.collect()}
+        assert got == exp, (len(got), len(exp))
+        t = timeit(lambda: transitive_closure(w, edges).count(), warmup=0, iters=2)
+        res[mode] = t
+        rows.append(row(f"tc_{mode}", t, f"closure_edges={len(exp)}"))
+    rows.append(row("tc_speedup", 0.0,
+                    f"ignis_vs_spark={res['spark']/res['ignis']:.2f}x"))
+    return rows

@@ -1,0 +1,27 @@
+"""TeraSort (paper Fig. 15): PSRS distributed sort throughput, ignis vs
+spark mode (host pipe on the pre-sort map)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import ICluster, IProperties, IWorker
+
+
+def _sort(worker, keys):
+    return worker.parallelize(keys).map(lambda x: x).sort().count()
+
+
+def bench(n: int = 200_000):
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**31 - 1, n).astype(np.int32)
+    rows = []
+    res = {}
+    for mode in ("ignis", "spark"):
+        w = IWorker(ICluster(IProperties({"ignis.mode": mode})), "python")
+        t = timeit(lambda: _sort(w, keys), warmup=1, iters=3)
+        res[mode] = t
+        rows.append(row(f"terasort_{mode}", t, f"Mkeys/s={n/t/1e6:.2f}"))
+    rows.append(row("terasort_speedup", 0.0,
+                    f"ignis_vs_spark={res['spark']/res['ignis']:.2f}x"))
+    return rows

@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: timing + CSV rows (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call (seconds), blocking on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn()) if _is_jax(fn) else fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn()
+        try:
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _is_jax(fn):
+    return True
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds*1e6:.1f},{derived}"
+
+
+def emit(rows: list[str]):
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)

@@ -1,0 +1,109 @@
+"""Render the §Roofline table from the dry-run results (dryrun.jsonl).
+
+Adds a kernel-adjusted memory term: the parsed HBM bytes include the O(S²)
+attention-score traffic the chunked-jnp baseline materialises; the Pallas
+flash kernel (validated in kernels/flash_attention) keeps scores in VMEM,
+so the adjusted term subtracts an analytic estimate of that traffic. Both
+numbers are reported — parsed is the honest compiled artifact, adjusted is
+the modelled kernel effect (labelled as such).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+HERE = os.path.dirname(__file__)
+JSONL = os.path.join(HERE, "results", "dryrun.jsonl")
+
+
+def load(jsonl=JSONL):
+    recs = {}
+    with open(jsonl) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[r["key"]] = r  # later lines win (retries)
+    return recs
+
+
+def scores_traffic_estimate(cfg, cell, chips: int) -> float:
+    """Per-device HBM bytes of materialised attention scores in the jnp path
+    (fwd ~2 passes + bwd ~4, f32) — what the flash kernel removes."""
+    if cfg.family == "ssm":
+        return 0.0
+    S = cell.seq_len if cell.kind != "decode" else 1
+    Skv = cell.seq_len
+    B = cell.global_batch
+    H = cfg.num_heads
+    layers = cfg.num_layers if cfg.family != "hybrid" else cfg.num_layers // cfg.attn_period
+    per = 4.0 * B * H * S * Skv  # one f32 materialisation
+    passes = 3 if cell.kind == "train" else 2
+    return per * passes * layers / chips
+
+
+def table(recs, mesh="single"):
+    rows = []
+    for key, r in sorted(recs.items()):
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        cfg = get_config(r["arch"])
+        cell = SHAPES[r["shape"]]
+        p = r["parsed"]
+        rf = r["roofline"]
+        est = scores_traffic_estimate(cfg, cell, r["chips"])
+        # never credit the kernel with more than 75% of the parsed traffic —
+        # CPU-HLO parsing overstates fusion misses, so the bound keeps the
+        # adjustment conservative and clearly below the honest parsed number
+        adj_mem = (p["hbm_bytes_per_device"] - min(est, 0.75 * p["hbm_bytes_per_device"])) / HBM_BW
+        dom_adj = max(
+            [("compute", rf["compute_s"]), ("memory", adj_mem),
+             ("collective", rf["collective_s"])],
+            key=lambda t: t[1],
+        )[0]
+        rows.append({
+            "cell": f"{r['arch']}|{r['shape']}",
+            "compute_s": rf["compute_s"],
+            "memory_s": rf["memory_s"],
+            "memory_s_flashadj": adj_mem,
+            "collective_s": rf["collective_s"],
+            "dominant": rf["dominant"],
+            "dominant_flashadj": dom_adj,
+            "model_flops": rf["model_flops"],
+            "useful_ratio": rf["useful_ratio"],
+            "roofline_fraction": rf["compute_s"] / max(rf["compute_s"], adj_mem,
+                                                       rf["collective_s"]),
+            "hbm_fits_16g": r["memory"]["per_device_total"] < 16 * 2**30,
+        })
+    return rows
+
+
+def bench():
+    from benchmarks.common import row as _row
+
+    recs = load()
+    rows = []
+    n_ok = sum(1 for r in recs.values() if r.get("ok"))
+    rows.append(_row("dryrun_cells_ok", 0.0, f"ok={n_ok}/{len(recs)}"))
+    for t in table(recs):
+        rows.append(_row(
+            f"roofline_{t['cell']}", t["compute_s"] * 1e-0,
+            f"dom={t['dominant']};dom_adj={t['dominant_flashadj']};"
+            f"frac={t['roofline_fraction']:.3f};useful={t['useful_ratio']:.3f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load()
+    hdr = ("cell", "compute_s", "memory_s", "memory_s_flashadj", "collective_s",
+           "dominant", "dominant_flashadj", "useful_ratio", "roofline_fraction",
+           "hbm_fits_16g")
+    print(",".join(hdr))
+    for t in table(recs):
+        print(",".join(str(t[h]) if not isinstance(t[h], float) else f"{t[h]:.5g}"
+                       for h in hdr))

@@ -1,0 +1,54 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+  Fig 13/14  bench_minebench   chained maps, ignis vs spark, multi-worker
+  Fig 15     bench_terasort    PSRS distributed sort
+  Fig 16     bench_kmeans      iterative: fused loop vs driver evaluation
+  Fig 17     bench_pagerank    join/reduceByKey graph pattern
+  Fig 18     bench_tc          join/union/distinct fixed point
+  Fig 19-22  bench_hpc_native  native SPMD apps via worker.call (overhead %)
+  Table 5    bench_sloc        integration SLOC
+  (ours)     roofline          §Roofline summary from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV. ``--only <name>`` to subset.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import emit
+
+BENCHES = [
+    ("minebench", "benchmarks.bench_minebench"),
+    ("terasort", "benchmarks.bench_terasort"),
+    ("kmeans", "benchmarks.bench_kmeans"),
+    ("pagerank", "benchmarks.bench_pagerank"),
+    ("tc", "benchmarks.bench_tc"),
+    ("hpc_native", "benchmarks.bench_hpc_native"),
+    ("sloc", "benchmarks.bench_sloc"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    rows = []
+    for name, mod_name in BENCHES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        mod = __import__(mod_name, fromlist=["bench"])
+        try:
+            rows.extend(mod.bench())
+            rows.append(f"_{name}_wall,{(time.time()-t0)*1e6:.0f},")
+        except Exception as e:  # keep the harness going; record the failure
+            rows.append(f"_{name}_FAILED,0,{type(e).__name__}:{e}")
+            print(f"[bench] {name} failed: {e}", file=sys.stderr)
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Running native HPC (SPMD/"MPI") applications inside the framework —
+the paper's §5 (LULESH example, Figs. 9–11).
+
+The stencil and CG proxy apps are plain collective programs; the framework
+integration is the @ignis_export wrapper + context argument parsing (the
+paper's +17…75 SLOC). This driver runs both through worker.call and checks
+the result matches executing them natively (paper's ≤2% overhead claim is
+measured in benchmarks/bench_hpc_native.py).
+
+Run:  PYTHONPATH=src python examples/native_hpc_app.py
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Ignis, ICluster, IProperties, IWorker
+from repro.apps.stencil import cg_native, laplacian_matvec_ref, stencil_native
+
+
+def main():
+    Ignis.start()
+    cluster = ICluster(IProperties())
+    worker = IWorker(cluster, "cpp")  # the paper's C++ worker
+    worker.load_library("repro.apps.stencil")
+
+    mesh, axis = worker.context.comm()
+
+    # ---- stencil (LULESH/miniAMR analogue) --------------------------------
+    grid = np.random.default_rng(0).normal(size=(32, 16)).astype(np.float32)
+    out_fw = worker.call("stencil_app", worker.parallelize(grid), iters=8)
+    got = np.stack([np.asarray(r) for r in out_fw.collect()])
+    native = np.asarray(stencil_native(mesh, axis, jnp.asarray(grid), 8))
+    print("stencil framework==native:", np.allclose(got, native, atol=1e-6))
+    assert np.allclose(got, native, atol=1e-6)
+
+    # ---- CG solver (AMG analogue) ------------------------------------------
+    b = np.random.default_rng(1).normal(size=128).astype(np.float32)
+    x_df = worker.call("cg_app", worker.parallelize(b), iters=200)
+    x = jnp.asarray([np.asarray(r) for r in x_df.collect()])
+    res = float(jnp.abs(laplacian_matvec_ref(x) - jnp.asarray(b)).max())
+    print(f"CG residual: {res:.2e}")
+    assert res < 1e-3
+
+    Ignis.stop()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

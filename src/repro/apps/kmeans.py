@@ -1,0 +1,75 @@
+"""K-Means (paper §6.2, Fig. 16) — the iterative-app pattern.
+
+Two execution strategies, the exact contrast the paper draws:
+
+  ignis mode — the whole iteration loop runs ON the fabric
+               (lax.fori_loop; executors exchange partial sums via the
+               sharding-induced psum). The driver never evaluates
+               intermediate results — paper §3.6's "no driver evaluations".
+  spark mode — one driver evaluation per iteration: partial sums are
+               collected to the host, combined, and new centers re-broadcast
+               (Spark's stop-executors / driver / restart-executors cycle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.native import ignis_export
+
+
+def make_points(n: int = 4096, d: int = 16, k: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * 5
+    asg = rng.integers(0, k, n)
+    pts = centers[asg] + rng.normal(size=(n, d))
+    return pts.astype(np.float32), centers.astype(np.float32)
+
+
+def _assign(pts, centers):
+    d2 = ((pts[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+    return jnp.argmin(d2, axis=1)
+
+
+def _update(pts, asg, k):
+    oh = jax.nn.one_hot(asg, k, dtype=pts.dtype)  # (n, k)
+    sums = oh.T @ pts  # (k, d)
+    counts = oh.sum(0)[:, None]
+    return sums / jnp.maximum(counts, 1.0)
+
+
+def kmeans_on_device(pts, centers0, iters: int):
+    """ignis mode: whole loop fused on device."""
+    k = centers0.shape[0]
+
+    def body(_, centers):
+        return _update(pts, _assign(pts, centers), k)
+
+    return jax.lax.fori_loop(0, iters, body, centers0)
+
+
+def kmeans_driver_eval(pts_dev, centers0, iters: int):
+    """spark mode: per-iteration driver evaluation (device_get each step)."""
+    k = centers0.shape[0]
+    centers = np.asarray(centers0)
+    assign_j = jax.jit(_assign)
+    update_j = jax.jit(lambda p, a: _update(p, a, k))
+    for _ in range(iters):
+        asg = assign_j(pts_dev, jnp.asarray(centers))
+        partial = update_j(pts_dev, asg)
+        centers = np.asarray(jax.device_get(partial))  # driver round-trip
+    return jnp.asarray(centers)
+
+
+@ignis_export("kmeans_mpi")
+def kmeans_native(ctx, data=None, valid=None):
+    """Native-app form (paper Fig. 12 pattern): data rows = points."""
+    iters = int(ctx.var("iters", 10))
+    k = int(ctx.var("k", 8))
+    seed = int(ctx.var("seed", 0))
+    pts = data
+    key = jax.random.PRNGKey(seed)
+    init = pts[jax.random.choice(key, pts.shape[0], (k,), replace=False)]
+    centers = kmeans_on_device(pts, init, iters)
+    return centers, jnp.ones((k,), bool)

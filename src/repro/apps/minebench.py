@@ -1,0 +1,77 @@
+"""Minebench (paper §6.2, Figs. 13–14): SHA-256 proof-of-work.
+
+Two chained maps exactly as in the paper: map₁ (data-intensive) reduces a
+block's transactions to a Merkle-style root; map₂ (compute-intensive)
+iterates nonces over the real SHA-256 compression until the difficulty
+condition is met (bounded iterations for benchmark determinism).
+
+The multi-"language" variant runs map₁ on one worker and map₂ on another
+with importData in between (paper Fig. 14) — in spark mode that hop
+serializes through the host (the pipe cost the paper measures).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.sha256 import sha256_words
+from repro.core.native import ignis_export
+
+
+def make_blocks(n_blocks: int, txs_per_block: int = 16, seed: int = 0) -> np.ndarray:
+    """Synthetic transaction sets: (n_blocks, txs_per_block, 16) uint32."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2**32, (n_blocks, txs_per_block, 16), dtype=np.uint32)
+
+
+def merkle_root(txs):
+    """map₁: pairwise SHA-256 reduction of the tx digests → (…, 8) root."""
+    h = sha256_words(txs)  # (T, 8) digests
+    while h.shape[-2] > 1:
+        if h.shape[-2] % 2:
+            h = jnp.concatenate([h, h[..., -1:, :]], axis=-2)
+        pair = jnp.concatenate([h[..., 0::2, :], h[..., 1::2, :]], axis=-1)  # (T/2, 16)
+        h = sha256_words(pair)
+    return h[..., 0, :]
+
+
+def mine(root, iters: int = 64, difficulty_bits: int = 12):
+    """map₂: iterate nonces; return (best_nonce, found). root: (8,) words."""
+    target = jnp.uint32(1) << jnp.uint32(32 - difficulty_bits)
+
+    def body(i, carry):
+        best, found = carry
+        header = jnp.zeros((16,), jnp.uint32)
+        header = header.at[:8].set(root)
+        header = header.at[8].set(i.astype(jnp.uint32))
+        header = header.at[15].set(jnp.uint32(36 * 8))
+        d = sha256_words(header)
+        hit = d[0] < target
+        best = jnp.where(hit & ~found, i.astype(jnp.uint32), best)
+        return best, found | hit
+
+    best, found = jax.lax.fori_loop(0, iters, body, (jnp.uint32(0), jnp.bool_(False)))
+    return best, found
+
+
+def map1_fn(txs):
+    return merkle_root(txs)
+
+
+def make_map2_fn(iters: int = 64, difficulty_bits: int = 12):
+    def f(root):
+        nonce, found = mine(root, iters, difficulty_bits)
+        return {"nonce": nonce, "found": found}
+
+    return f
+
+
+@ignis_export("minebench_mpi")
+def minebench_native(ctx, data=None, valid=None):
+    """Native SPMD variant: whole pipeline in one on-fabric program."""
+    iters = int(ctx.var("iters", 64))
+    bits = int(ctx.var("difficulty_bits", 12))
+    roots = jax.vmap(merkle_root)(data)
+    nonce, found = jax.vmap(lambda r: mine(r, iters, bits))(roots)
+    return {"nonce": nonce, "found": found}, valid

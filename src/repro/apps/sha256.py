@@ -1,0 +1,94 @@
+"""SHA-256 in pure jnp uint32 ops (vectorized over messages).
+
+The paper's Minebench computes real SHA-256 proof-of-work hashes (§6.2);
+this is the same compression function, restricted to single-chunk (≤55
+byte) messages — a block-header digest + nonce fits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_K = np.array([
+    0x428A2F98, 0x71374491, 0xB5C0FBCF, 0xE9B5DBA5, 0x3956C25B, 0x59F111F1,
+    0x923F82A4, 0xAB1C5ED5, 0xD807AA98, 0x12835B01, 0x243185BE, 0x550C7DC3,
+    0x72BE5D74, 0x80DEB1FE, 0x9BDC06A7, 0xC19BF174, 0xE49B69C1, 0xEFBE4786,
+    0x0FC19DC6, 0x240CA1CC, 0x2DE92C6F, 0x4A7484AA, 0x5CB0A9DC, 0x76F988DA,
+    0x983E5152, 0xA831C66D, 0xB00327C8, 0xBF597FC7, 0xC6E00BF3, 0xD5A79147,
+    0x06CA6351, 0x14292967, 0x27B70A85, 0x2E1B2138, 0x4D2C6DFC, 0x53380D13,
+    0x650A7354, 0x766A0ABB, 0x81C2C92E, 0x92722C85, 0xA2BFE8A1, 0xA81A664B,
+    0xC24B8B70, 0xC76C51A3, 0xD192E819, 0xD6990624, 0xF40E3585, 0x106AA070,
+    0x19A4C116, 0x1E376C08, 0x2748774C, 0x34B0BCB5, 0x391C0CB3, 0x4ED8AA4A,
+    0x5B9CCA4F, 0x682E6FF3, 0x748F82EE, 0x78A5636F, 0x84C87814, 0x8CC70208,
+    0x90BEFFFA, 0xA4506CEB, 0xBEF9A3F7, 0xC67178F2], dtype=np.uint32)
+
+_H0 = np.array([
+    0x6A09E667, 0xBB67AE85, 0x3C6EF372, 0xA54FF53A,
+    0x510E527F, 0x9B05688C, 0x1F83D9AB, 0x5BE0CD19], dtype=np.uint32)
+
+
+def _rotr(x, n):
+    return (x >> jnp.uint32(n)) | (x << jnp.uint32(32 - n))
+
+
+def sha256_words(w16):
+    """Compress one padded 16-word chunk. w16: (..., 16) uint32 big-endian
+    words. Returns (..., 8) uint32 digest.
+
+    Rounds run under lax.fori_loop (rolled) — the unrolled 64-round graph
+    compiles pathologically slowly on the CPU backend and no faster on TPU.
+    """
+    w16 = w16.astype(jnp.uint32)
+    prefix = w16.shape[:-1]
+    K = jnp.asarray(_K)
+    w = jnp.concatenate([w16, jnp.zeros((*prefix, 48), jnp.uint32)], axis=-1)
+
+    def sched(i, w):
+        a = jax.lax.dynamic_index_in_dim(w, i - 15, -1, keepdims=False)
+        b = jax.lax.dynamic_index_in_dim(w, i - 2, -1, keepdims=False)
+        c16 = jax.lax.dynamic_index_in_dim(w, i - 16, -1, keepdims=False)
+        c7 = jax.lax.dynamic_index_in_dim(w, i - 7, -1, keepdims=False)
+        s0 = _rotr(a, 7) ^ _rotr(a, 18) ^ (a >> jnp.uint32(3))
+        s1 = _rotr(b, 17) ^ _rotr(b, 19) ^ (b >> jnp.uint32(10))
+        val = c16 + s0 + c7 + s1
+        return jax.lax.dynamic_update_index_in_dim(w, val, i, -1)
+
+    w = jax.lax.fori_loop(16, 64, sched, w)
+
+    state0 = jnp.broadcast_to(jnp.asarray(_H0), (*prefix, 8))
+
+    def rnd(i, st):
+        a, b, c, d = st[..., 0], st[..., 1], st[..., 2], st[..., 3]
+        e, f, g, h = st[..., 4], st[..., 5], st[..., 6], st[..., 7]
+        S1 = _rotr(e, 6) ^ _rotr(e, 11) ^ _rotr(e, 25)
+        ch = (e & f) ^ (~e & g)
+        wi = jax.lax.dynamic_index_in_dim(w, i, -1, keepdims=False)
+        t1 = h + S1 + ch + K[i] + wi
+        S0 = _rotr(a, 2) ^ _rotr(a, 13) ^ _rotr(a, 22)
+        maj = (a & b) ^ (a & c) ^ (b & c)
+        t2 = S0 + maj
+        return jnp.stack([t1 + t2, a, b, c, d + t1, e, f, g], axis=-1)
+
+    st = jax.lax.fori_loop(0, 64, rnd, state0)
+    return st + jnp.asarray(_H0)
+
+
+def sha256_bytes_len(msg_words, nbytes: int):
+    """Digest of an ≤55-byte message already packed into (..., 16) uint32
+    words (big-endian), with the 0x80 pad bit and bit-length word applied
+    here. msg_words must be zero beyond nbytes."""
+    w = msg_words.astype(jnp.uint32)
+    # set the 0x80 byte at position nbytes
+    word_idx = nbytes // 4
+    byte_in = nbytes % 4
+    pad = jnp.uint32(0x80) << jnp.uint32(8 * (3 - byte_in))
+    w = w.at[..., word_idx].add(pad)
+    w = w.at[..., 15].set(jnp.uint32(nbytes * 8))
+    return sha256_words(w)
+
+
+def pack_bytes(data: np.ndarray) -> np.ndarray:
+    """(…, 64) uint8 → (…, 16) uint32 big-endian words (host helper)."""
+    d = data.astype(np.uint32).reshape(*data.shape[:-1], 16, 4)
+    return (d[..., 0] << 24) | (d[..., 1] << 16) | (d[..., 2] << 8) | d[..., 3]

@@ -1,0 +1,32 @@
+"""Assigned architecture configs (+ the paper's own example presets).
+
+Importing this package registers every config; ``get_config(name)`` fetches.
+"""
+from repro.configs.base import ArchConfig, ShapeCell, SHAPES, get_config, list_configs  # noqa: F401
+
+from repro.configs import (  # noqa: F401  (registration side-effects)
+    yi_9b,
+    qwen3_14b,
+    gemma3_4b,
+    olmo_1b,
+    mamba2_780m,
+    whisper_tiny,
+    jamba_1_5_large_398b,
+    internvl2_1b,
+    phi3_5_moe_42b_a6_6b,
+    mixtral_8x7b,
+    paper_app,
+)
+
+ASSIGNED = [
+    "yi-9b",
+    "qwen3-14b",
+    "gemma3-4b",
+    "olmo-1b",
+    "mamba2-780m",
+    "whisper-tiny",
+    "jamba-1.5-large-398b",
+    "internvl2-1b",
+    "phi3.5-moe-42b-a6.6b",
+    "mixtral-8x7b",
+]

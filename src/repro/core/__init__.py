@@ -1,0 +1,20 @@
+"""IgnisHPC-JAX core: the paper's contribution.
+
+One communication fabric (a jax Mesh + lax collectives) under two programming
+models:
+
+  * a Spark-inspired lazy dataflow API (``IDataFrame``) whose shuffles,
+    sorts and reductions run as on-device collectives (no driver round-trips)
+  * native SPMD "MPI" programs (``worker.call``) that receive the worker's
+    communicator (mesh + axis) exactly like IgnisHPC hands MPI apps
+    ``IGNIS_COMM_WORLD``
+
+plus the lazy task-dependency graph with lineage-based fault tolerance and
+the driver-round-trip "spark mode" baseline the paper compares against.
+"""
+from repro.core.properties import IProperties  # noqa: F401
+from repro.core.cluster import Ignis, ICluster, IWorker  # noqa: F401
+from repro.core.dataframe import IDataFrame  # noqa: F401
+from repro.core.context import IContext  # noqa: F401
+from repro.core.textlambda import ISource, text_lambda  # noqa: F401
+from repro.core.native import ignis_export  # noqa: F401

@@ -1,0 +1,277 @@
+"""Ignis / ICluster / IWorker — the job hierarchy (paper §3.2, Fig. 2).
+
+A *Cluster* owns a device mesh (its "containers"); *Workers* are
+programming-model execution contexts on that mesh — the multi-language
+adaptation (DESIGN.md §2): instead of a Python worker and a C++ worker, a
+job creates dataflow workers and SPMD workers that interoperate through
+``importData`` (the inter-worker communicator: a resharding device_put on
+the same fabric, zero host round-trips) — or, in "spark" mode, through the
+serialize→host→deserialize pipe the paper benchmarks against.
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.context import IContext
+from repro.core.dag import DagEngine, TaskNode
+from repro.core.dataframe import IDataFrame
+from repro.core.native import get_app, load_library
+from repro.core.partition import Block, from_host
+from repro.core.properties import IProperties
+from repro.core.textlambda import ISource
+
+
+class Ignis:
+    """Framework lifecycle (paper Fig. 6 lines 6/42)."""
+
+    _started = False
+
+    @classmethod
+    def start(cls):
+        cls._started = True
+
+    @classmethod
+    def stop(cls):
+        cls._started = False
+
+    @classmethod
+    def running(cls) -> bool:
+        return cls._started
+
+
+class ICluster:
+    """A group of executor containers = a device mesh slice (paper §3.2)."""
+
+    def __init__(self, props: Optional[IProperties] = None, mesh=None):
+        self.props = props or IProperties()
+        if mesh is None:
+            n = min(
+                self.props.get_int("ignis.executor.instances", 1), len(jax.devices())
+            )
+            mesh = jax.make_mesh(
+                (max(n, 1),), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+            )
+        self.mesh = mesh
+        self.workers: list[IWorker] = []
+
+    # paper §4: remote commands to containers — host-side here
+    def execute(self, fn, *args, **kw):
+        return fn(*args, **kw)
+
+    def execute_script(self, src: str):
+        scope = {}
+        exec(src, scope)  # noqa: S102
+        return scope
+
+    def send_file(self, src: str, dst: str):
+        with open(src, "rb") as f, open(dst, "wb") as g:
+            g.write(f.read())
+
+    sendFile = send_file
+    executeScript = execute_script
+
+
+class IWorker:
+    """One programming-model context bound to a cluster (paper §3.2).
+
+    kind: "dataflow" (IDataFrame ops) | "spmd" (native collective apps).
+    Both share the cluster mesh — that is the paper's whole point.
+    """
+
+    def __init__(self, cluster: ICluster, kind: str = "dataflow", name: str = ""):
+        if kind in ("python", "cpp", "java"):  # paper-style language names
+            kind = "dataflow"
+        self.cluster = cluster
+        self.kind = kind
+        self.name = name or f"{kind}-{len(cluster.workers)}"
+        self.context = IContext(cluster.mesh, "data", cluster.props, self)
+        self.engine = DagEngine()
+        self.mode = cluster.props.get("ignis.mode", "ignis")
+        self.capacity_factor = cluster.props.get_float("ignis.shuffle.capacity.factor", 2.0)
+        self.join_max_matches = cluster.props.get_int("ignis.join.max.matches", 8)
+        self._libraries: list[str] = []
+        cluster.workers.append(self)
+
+    # ------------------------------------------------------------------
+    # data ingestion (driver communicator)
+    # ------------------------------------------------------------------
+    @property
+    def executors(self) -> int:
+        return self.context.executors
+
+    def _put(self, x):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        return jax.device_put(x, NamedSharding(self.context.mesh, P(self.context.axis)))
+
+    def parallelize(self, rows, blocks: int = 1) -> IDataFrame:
+        p = self.executors
+        if blocks <= 1:
+            blk = [from_host(rows, p, put=self._put)]
+        else:
+            per = (len(rows) + blocks - 1) // blocks
+            blk = [
+                from_host(rows[i * per : (i + 1) * per], p, put=self._put)
+                for i in range(blocks)
+                if len(rows[i * per : (i + 1) * per])
+            ]
+        node = TaskNode("parallelize", [], fn=lambda _: blk, narrow=False)
+        node.result = blk
+        node.cached = True
+        return IDataFrame(self, node)
+
+    def text_file(self, path: str, as_tokens: bool = False, blocks: int = 1):
+        """Read a text file. Rows are (line-hash, length) pairs unless
+        ``as_tokens`` — then the host tokenizer (the 'modality frontend' of
+        text) maps words to ids and rows are token ids."""
+        with open(path) as f:
+            lines = [l.rstrip("\n") for l in f]
+        if as_tokens:
+            vocab: dict[str, int] = {}
+            toks = []
+            for line in lines:
+                for w in line.split():
+                    toks.append(vocab.setdefault(w, len(vocab)))
+            self._text_vocab = vocab
+            return self.parallelize(np.asarray(toks, np.int32), blocks)
+        self._text_lines = lines
+        rows = np.asarray([[hash(l) & 0x7FFFFFFF, len(l)] for l in lines], np.int32)
+        return self.parallelize(rows, blocks)
+
+    textFile = text_file
+
+    def partition_json_file(self, path: str) -> IDataFrame:
+        import json
+
+        with open(path) as f:
+            data = json.load(f)
+        return self.parallelize(np.asarray(data))
+
+    partitionJsonFile = partition_json_file
+
+    # ------------------------------------------------------------------
+    # inter-worker communicator (paper Fig. 4: importData)
+    # ------------------------------------------------------------------
+    def import_data(self, df: IDataFrame) -> IDataFrame:
+        src_worker = df.worker
+
+        def fn(parent_results):
+            out = []
+            for b in parent_results[0]:
+                if self.mode == "spark" or src_worker.mode == "spark":
+                    # the paper's pipe: serialize → host → deserialize
+                    data = pickle.loads(pickle.dumps(jax.device_get(b.data)))
+                    valid = np.asarray(jax.device_get(b.valid))
+                    out.append(
+                        Block(
+                            jax.tree.map(self._put, data),
+                            self._put(valid),
+                        )
+                    )
+                else:
+                    # on-fabric reshard: MPI inter-worker communicator
+                    out.append(
+                        Block(jax.tree.map(self._put, b.data), self._put(b.valid))
+                    )
+            return out
+
+        node = TaskNode("importData", [df.node], fn=fn, narrow=False)
+        return IDataFrame(self, node)
+
+    importData = import_data
+
+    # ------------------------------------------------------------------
+    # native SPMD apps (paper §5)
+    # ------------------------------------------------------------------
+    def load_library(self, path_or_module: str) -> list[str]:
+        names = load_library(path_or_module)
+        self._libraries.extend(names)
+        return names
+
+    loadLibrary = load_library
+
+    def _call_ctx(self, params: dict) -> IContext:
+        ctx = self.context.child()
+        for k, v in params.items():
+            ctx.set_var(k, v)
+        return ctx
+
+    def void_call(self, fn_name, df: IDataFrame | None = None, **params):
+        """Run a native app for effect (paper's voidCall)."""
+        src = fn_name.fn if isinstance(fn_name, ISource) else fn_name
+        if isinstance(fn_name, ISource):
+            params = {**fn_name.params, **params}
+        app = get_app(src) if isinstance(src, str) else src
+        ctx = self._call_ctx(params)
+        args = ()
+        if df is not None:
+            b = df._merged()
+            args = (b.data, b.valid)
+        return app(ctx, *args)
+
+    def call(self, fn_name, df: IDataFrame | None = None, **params) -> IDataFrame:
+        """Run a native app returning rows → IDataFrame (paper's call)."""
+        src = fn_name.fn if isinstance(fn_name, ISource) else fn_name
+        if isinstance(fn_name, ISource):
+            params = {**fn_name.params, **params}
+        app = get_app(src) if isinstance(src, str) else src
+        ctx = self._call_ctx(params)
+        parents = [df.node] if df is not None else []
+
+        def fn(parent_results):
+            args = ()
+            if parent_results:
+                from repro.core.partition import concat_blocks
+
+                b = concat_blocks(parent_results[0])
+                args = (b.data, b.valid)
+            out = app(ctx, *args)
+            if isinstance(out, Block):
+                return [out]
+            data, valid = out
+            return [Block(data, valid)]
+
+        return IDataFrame(self, TaskNode(f"call:{src}", parents, fn=fn, narrow=False))
+
+    voidCall = void_call
+
+    # ------------------------------------------------------------------
+    # spark-mode pipe simulation (paper §2.1: system pipes outside the JVM)
+    # ------------------------------------------------------------------
+    # PySpark serializes RDD elements through the JVM↔worker pipe in pickle
+    # batches (default batchSize=1024) — per-ELEMENT object serialization,
+    # not one bulk buffer. That is the cost the paper measures (§2.1, §6.2);
+    # we model it faithfully.
+    _PIPE_BATCH = 1024
+
+    def _pipe_block(self, b: Block) -> Block:
+        """Charge the pipe cost: device→host, per-element pickle of every
+        (valid) row in PySpark-sized batches, host→device. The data itself is
+        returned unchanged — this models serialization cost, not semantics."""
+        data = jax.device_get(b.data)
+        valid = np.asarray(jax.device_get(b.valid))
+        leaves, _ = jax.tree_util.tree_flatten(data)
+        idx = np.nonzero(valid)[0]
+        for lo in range(0, len(idx), self._PIPE_BATCH):
+            sel = idx[lo : lo + self._PIPE_BATCH]
+            batch = [[np.asarray(l[i]) for l in leaves] for i in sel]
+            pickle.loads(pickle.dumps(batch))  # the JVM↔worker pipe
+        return Block(jax.tree.map(self._put, data), self._put(valid))
+
+    def _pipe_wrap(self, block_fn):
+        def wrapped(parent_blocks):
+            return self._pipe_block(block_fn(parent_blocks))
+
+        return wrapped
+
+    def _pipe_wrap_wide(self, node_fn):
+        """Spark's shuffle path: results serialize through the host (JVM)."""
+
+        def wrapped(parent_results):
+            return [self._pipe_block(b) for b in node_fn(parent_results)]
+
+        return wrapped

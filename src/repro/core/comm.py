@@ -1,0 +1,134 @@
+"""The "MPI" layer: collective primitives over shard_map (paper §2.2, §3.6).
+
+Every routine takes an IContext (the communicator) and operates on arrays
+sharded along the context axis. These are the primitives the executor module
+builds the dataflow operators out of, and the ones native SPMD apps call —
+the analogue of MPICH under both worlds, with jax.lax collectives on
+ICI/DCN instead of send/recv on Infiniband.
+
+"Non-blocking" variants are jax's async dispatch itself (every call below
+returns before the transfer completes; jax.block_until_ready is MPI_Wait).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.context import IContext
+
+
+def _smap(ctx: IContext, f, in_specs, out_specs):
+    return jax.shard_map(f, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=False)
+
+
+def _sharded(ctx):  # leading dim sharded over the context axis
+    return P(ctx.axis)
+
+
+# ---------------------------------------------------------------------------
+# collectives (gather / scatter / bcast / reduce / allreduce / alltoall …)
+# ---------------------------------------------------------------------------
+
+
+def allreduce(ctx: IContext, x, op: str = "sum"):
+    """MPI_Allreduce over executor shards: x is axis-sharded on dim 0."""
+    red = {"sum": jax.lax.psum, "max": jax.lax.pmax, "min": jax.lax.pmin}[op]
+
+    def f(xs):
+        local = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}[op](xs, axis=0)
+        return red(local, ctx.axis)
+
+    return _smap(ctx, f, (_sharded(ctx),), P())(x)
+
+
+def reduce(ctx: IContext, x, op: str = "sum"):
+    """MPI_Reduce (root=driver): same wire pattern as allreduce on TPU."""
+    return allreduce(ctx, x, op)
+
+
+def bcast(ctx: IContext, x):
+    """MPI_Bcast: replicate a driver value across executors."""
+    return jax.device_put(x, jax.NamedSharding(ctx.mesh, P()))
+
+
+def gather(ctx: IContext, x):
+    """MPI_Allgather: axis-sharded (n, …) → replicated (n, …)."""
+
+    def f(xs):
+        return jax.lax.all_gather(xs, ctx.axis, tiled=True)
+
+    return _smap(ctx, f, (_sharded(ctx),), P())(x)
+
+
+def scatter(ctx: IContext, x):
+    """MPI_Scatter: replicated (n, …) → axis-sharded (n, …)."""
+    return jax.device_put(x, jax.NamedSharding(ctx.mesh, _sharded(ctx)))
+
+
+def alltoall(ctx: IContext, x):
+    """MPI_Alltoall. x: (p·k, …) axis-sharded on dim 0; shard i holds the
+    (k, …) rows destined for each peer in order. Returns same shape with
+    rows regrouped by source."""
+    p = ctx.executors
+
+    def f(xs):  # xs: (p*k/p ... ) local (p, k/p?) — reshape to (p, k)
+        k = xs.shape[0] // p
+        y = xs.reshape(p, k, *xs.shape[1:])
+        y = jax.lax.all_to_all(y, ctx.axis, split_axis=0, concat_axis=0, tiled=False)
+        return y.reshape(p * k, *xs.shape[1:])
+
+    return _smap(ctx, f, (_sharded(ctx),), _sharded(ctx))(x)
+
+
+def ppermute(ctx: IContext, x, shift: int = 1):
+    """MPI_Sendrecv ring: shard i's rows go to shard (i+shift) % p."""
+    p = ctx.executors
+    perm = [(i, (i + shift) % p) for i in range(p)]
+
+    def f(xs):
+        return jax.lax.ppermute(xs, ctx.axis, perm)
+
+    return _smap(ctx, f, (_sharded(ctx),), _sharded(ctx))(x)
+
+
+def barrier(ctx: IContext):
+    """MPI_Barrier: a zero-byte allreduce, blocked on."""
+    z = scatter(ctx, jnp.zeros((ctx.executors,), jnp.int32))
+    jax.block_until_ready(allreduce(ctx, z))
+
+
+def exscan(ctx: IContext, x, op: str = "sum"):
+    """MPI_Exscan (exclusive prefix over executor ranks) of per-shard scalars.
+
+    x: (p,) axis-sharded (one scalar per executor)."""
+
+    def f(xs):
+        all_ = jax.lax.all_gather(xs, ctx.axis, tiled=True)  # (p,)
+        idx = jax.lax.axis_index(ctx.axis)
+        mask = jnp.arange(all_.shape[0]) < idx
+        return jnp.sum(all_ * mask, axis=0, keepdims=True)
+
+    return _smap(ctx, f, (_sharded(ctx),), _sharded(ctx))(x)
+
+
+# ---------------------------------------------------------------------------
+# helpers for data placement
+# ---------------------------------------------------------------------------
+
+
+def shard_rows(ctx: IContext, x):
+    """Place an (N, …) array sharded by rows over the executor axis."""
+    return jax.device_put(x, jax.NamedSharding(ctx.mesh, _sharded(ctx)))
+
+
+def replicate(ctx: IContext, x):
+    return jax.device_put(x, jax.NamedSharding(ctx.mesh, P()))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_jit(fn, *static):
+    return jax.jit(fn, static_argnums=tuple(range(1, 1 + len(static))))

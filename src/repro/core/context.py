@@ -1,0 +1,60 @@
+"""IContext — the executor context (paper §3.6).
+
+The TPU analogue of IgnisHPC's MPI communicators (paper Fig. 4):
+
+  base communicator    → the worker's (mesh, axis) pair: every executor
+                         (device along the "data" axis) participates
+  driver communicator  → host↔device transfers (device_put / device_get)
+  inter-worker comm.   → resharding between two workers' meshes (importData)
+
+Inside a native SPMD program the context is what ``MPI_COMM_WORLD`` is to an
+MPI code: ``ctx.axis`` names the collective axis for jax.lax primitives, and
+``ctx.var(...)`` carries driver variables to the executors (paper Fig. 10
+parses LULESH's argv from exactly this mechanism).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+class IContext:
+    def __init__(self, mesh, axis: str = "data", props=None, worker=None):
+        self.mesh = mesh
+        self.axis = axis
+        self.props = props
+        self.worker = worker
+        self._vars: dict[str, Any] = {}
+
+    # ---- communicator surface (the MPI_COMM_WORLD analogue) ---------------
+    def comm(self):
+        """The base communicator: (mesh, collective axis name)."""
+        return self.mesh, self.axis
+
+    @property
+    def executors(self) -> int:
+        """World size along the collective axis."""
+        return self.mesh.shape[self.axis]
+
+    def rank(self):
+        """Executor rank — only meaningful inside shard_map'd code."""
+        return jax.lax.axis_index(self.axis)
+
+    # ---- driver↔executor variable exchange (ISource.addParam / context.var)
+    def set_var(self, name: str, value):
+        self._vars[name] = value
+
+    def is_var(self, name: str) -> bool:
+        return name in self._vars
+
+    def var(self, name: str, default=None):
+        return self._vars.get(name, default)
+
+    def vars(self) -> dict:
+        return dict(self._vars)
+
+    def child(self, **extra_vars) -> "IContext":
+        c = IContext(self.mesh, self.axis, self.props, self.worker)
+        c._vars = {**self._vars, **extra_vars}
+        return c

@@ -1,0 +1,456 @@
+"""IDataFrame — the Spark-inspired lazy dataflow API (paper §4, Table 1).
+
+Transformations register TaskNodes (lazy); actions trigger DAG evaluation.
+All wide operators execute as collectives on the worker's fabric ("ignis"
+mode). "spark" mode (paper's baseline) routes every block through the
+driver host between operators — the JVM-pipe / driver-evaluation cost the
+paper measures against.
+
+Row functions may be Python callables, ``ISource`` wrappers or text lambdas
+(paper §4.2) — resolved by ``textlambda.resolve``.
+"""
+from __future__ import annotations
+
+import json as _json
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executor as ex
+from repro.core import shuffle as sh
+from repro.core.dag import TaskNode
+from repro.core.partition import Block, concat_blocks, from_host, split_block, to_host
+from repro.core.textlambda import resolve
+
+
+def _pack_default(row):
+    """Default sortable packing of a row (distinct/sort keys).
+
+    Scalars pass through; (a, b) int pairs pack to (a<<16)|b — fine for the
+    graph demos (vertex ids < 2^16); users pass key_fn for wider domains.
+    """
+    if isinstance(row, tuple) and len(row) == 2:
+        return (row[0].astype(jnp.int32) << 16) | (row[1].astype(jnp.int32) & 0xFFFF)
+    if isinstance(row, dict) and set(row) == {"key", "value"}:
+        return row["key"]
+    return row
+
+
+class IDataFrame:
+    def __init__(self, worker, node: TaskNode):
+        self.worker = worker
+        self.node = node
+
+    # ------------------------------------------------------------------
+    # plumbing
+    # ------------------------------------------------------------------
+    @property
+    def _ctx(self):
+        return self.worker.context
+
+    @property
+    def _engine(self):
+        return self.worker.engine
+
+    def _narrow(self, op: str, block_fn) -> "IDataFrame":
+        if self.worker.mode == "spark":
+            block_fn = self.worker._pipe_wrap(block_fn)
+        node = TaskNode(op, [self.node], block_fn=block_fn, narrow=True)
+        return IDataFrame(self.worker, node)
+
+    def _wide(self, op: str, fn, extra_parents=()) -> "IDataFrame":
+        if self.worker.mode == "spark":
+            fn = self.worker._pipe_wrap_wide(fn)
+        node = TaskNode(op, [self.node, *extra_parents], fn=fn, narrow=False)
+        return IDataFrame(self.worker, node)
+
+    def _blocks(self) -> list[Block]:
+        return self._engine.evaluate(self.node)
+
+    def _merged(self) -> Block:
+        return concat_blocks(self._blocks())
+
+    # ------------------------------------------------------------------
+    # conversion transformations (narrow)
+    # ------------------------------------------------------------------
+    def map(self, fn) -> "IDataFrame":
+        fn = resolve(fn)
+        return self._narrow("map", lambda ps: ex.map_block(ps[0], fn))
+
+    def filter(self, fn) -> "IDataFrame":
+        fn = resolve(fn)
+        return self._narrow("filter", lambda ps: ex.filter_block(ps[0], fn))
+
+    def flatmap(self, fn, fanout: int) -> "IDataFrame":
+        fn = resolve(fn)
+        return self._narrow("flatmap", lambda ps: ex.flatmap_block(ps[0], fn, fanout))
+
+    def map_partitions(self, fn) -> "IDataFrame":
+        fn = resolve(fn)
+        return self._narrow("mapPartitions", lambda ps: ex.map_partitions_block(ps[0], fn))
+
+    def key_by(self, fn) -> "IDataFrame":
+        fn = resolve(fn)
+        return self._narrow("keyBy", lambda ps: ex.key_by_block(ps[0], fn))
+
+    def map_values(self, fn) -> "IDataFrame":
+        fn = resolve(fn)
+        return self._narrow("mapValues", lambda ps: ex.map_values_block(ps[0], fn))
+
+    def keys(self) -> "IDataFrame":
+        return self._narrow("keys", lambda ps: ex.keys_block(ps[0]))
+
+    def values(self) -> "IDataFrame":
+        return self._narrow("values", lambda ps: ex.values_block(ps[0]))
+
+    def sample(self, fraction: float, seed: int = 0) -> "IDataFrame":
+        return self._narrow("sample", lambda ps: ex.sample_block(ps[0], fraction, seed))
+
+    def sample_by_key(self, fractions: dict, seed: int = 0) -> "IDataFrame":
+        """Stratified sampling on a KV frame: per-key keep fractions."""
+        items = sorted((int(k), float(v)) for k, v in fractions.items())
+        keys_arr = jnp.asarray([k for k, _ in items], jnp.int32)
+        frac_arr = jnp.asarray([v for _, v in items], jnp.float32)
+
+        def block_fn(ps):
+            b = ps[0]
+            k = b.data["key"].astype(jnp.int32)
+            idx = jnp.searchsorted(keys_arr, k)
+            idxc = jnp.clip(idx, 0, keys_arr.shape[0] - 1)
+            f = jnp.where(keys_arr[idxc] == k, frac_arr[idxc], 0.0)
+            u = jax.random.uniform(jax.random.PRNGKey(seed + b.capacity), (b.capacity,))
+            return Block(b.data, b.valid & (u < f))
+
+        return self._narrow("sampleByKey", block_fn)
+
+    def take_sample(self, n: int, seed: int = 0) -> list:
+        """Action: uniform sample of n valid rows (without replacement)."""
+        rows = self.collect()
+        import random
+
+        rng = random.Random(seed)
+        return rng.sample(rows, min(n, len(rows)))
+
+    def foreach(self, fn):
+        """Action: apply a host-side fn to every valid row (paper's Void fns)."""
+        fn = resolve(fn)
+        for row in self.collect():
+            fn(row)
+
+    sampleByKey = sample_by_key
+    takeSample = take_sample
+
+    # camelCase aliases (paper API)
+    flatMap = flatmap
+    keyBy = key_by
+    mapValues = map_values
+    mapPartitions = map_partitions
+
+    # ------------------------------------------------------------------
+    # SQL-ish / set ops
+    # ------------------------------------------------------------------
+    def union(self, other: "IDataFrame") -> "IDataFrame":
+        def fn(parent_results):
+            return parent_results[0] + parent_results[1]
+
+        return self._wide("union", fn, extra_parents=[other.node])
+
+    def distinct(self, key_fn=None) -> "IDataFrame":
+        key_fn = resolve(key_fn) if key_fn else _pack_default
+        ctx = self._ctx
+
+        def fn(parent_results):
+            b = concat_blocks(parent_results[0])
+            sb, keys = sh.sort_block(ctx, b, key_fn, self.worker.capacity_factor)
+            heads = sh.segment_heads(keys, sb.valid)
+            return [Block(sb.data, heads)]
+
+        return self._wide("distinct", fn)
+
+    def join(self, other: "IDataFrame", max_matches: int | None = None) -> "IDataFrame":
+        """Inner join of two KV frames → rows (key, (lvalue, rvalue))."""
+        M = max_matches or self.worker.join_max_matches
+        ctx = self._ctx
+        cf = self.worker.capacity_factor
+
+        def fn(parent_results):
+            lb = concat_blocks(parent_results[0])
+            rb = concat_blocks(parent_results[1])
+            lk, lv, ld, o1 = sh.hash_exchange(ctx, lb.data["key"], lb.valid,
+                                              lb.data["value"], cf)
+            rk, rv, rd, o2 = sh.hash_exchange(ctx, rb.data["key"], rb.valid,
+                                              rb.data["value"], cf)
+            if int(jax.device_get(o1)) or int(jax.device_get(o2)):
+                big = float(ctx.executors)
+                lk, lv, ld, _ = sh.hash_exchange(ctx, lb.data["key"], lb.valid,
+                                                 lb.data["value"], big)
+                rk, rv, rd, _ = sh.hash_exchange(ctx, rb.data["key"], rb.valid,
+                                                 rb.data["value"], big)
+            p = ctx.executors
+            m = M
+            for _attempt in range(5):  # overflow → double the fan-out bound
+                if p == 1:
+                    rows, ok, ovf = sh.local_join(lk, lv, ld, rk, rv, rd, m)
+                else:
+                    from jax.sharding import PartitionSpec as P
+
+                    def _local(a, b, c, d, e, g, m=m):
+                        rows, ok, ovf = sh.local_join(a, b, c, d, e, g, m)
+                        return rows, ok, jax.lax.psum(ovf, ctx.axis)
+
+                    f = jax.shard_map(
+                        _local,
+                        mesh=ctx.mesh,
+                        in_specs=(P(ctx.axis),) * 6,
+                        out_specs=(P(ctx.axis), P(ctx.axis), P()),
+                        check_vma=False,
+                    )
+                    rows, ok, ovf = f(lk, lv, ld, rk, rv, rd)
+                if int(jax.device_get(jnp.sum(ovf))) == 0:
+                    break
+                m *= 2
+            return [Block(rows, ok)]
+
+        return self._wide("join", fn, extra_parents=[other.node])
+
+    # ------------------------------------------------------------------
+    # sort / group / reduceByKey
+    # ------------------------------------------------------------------
+    def sort_by(self, key_fn, ascending: bool = True) -> "IDataFrame":
+        key_fn = resolve(key_fn)
+        ctx = self._ctx
+        cf = self.worker.capacity_factor
+
+        def fn(parent_results):
+            b = concat_blocks(parent_results[0])
+            sb, _ = sh.sort_block(ctx, b, key_fn, cf, ascending)
+            return [sb]
+
+        return self._wide("sortBy", fn)
+
+    def sort(self, ascending: bool = True) -> "IDataFrame":
+        return self.sort_by(lambda r: r, ascending)
+
+    def sort_by_key(self, ascending: bool = True) -> "IDataFrame":
+        return self.sort_by(lambda r: r["key"], ascending)
+
+    def reduce_by_key(self, fn, identity=0) -> "IDataFrame":
+        fn = resolve(fn)
+        ctx = self._ctx
+        cf = self.worker.capacity_factor
+
+        def node_fn(parent_results):
+            b = concat_blocks(parent_results[0])
+            sb, keys = sh.sort_block(ctx, b, lambda r: r["key"], cf)
+            vfn = lambda a, b2: jax.tree.map(lambda x, y: fn(x, y), a, b2)
+            heads, red = sh.segmented_reduce(keys, sb.valid, sb.data["value"], vfn, identity)
+            return [Block({"key": sb.data["key"], "value": red}, heads)]
+
+        return self._wide("reduceByKey", node_fn)
+
+    def aggregate_by_key(self, zero, seq_fn, comb_fn) -> "IDataFrame":
+        seq_fn, comb_fn = resolve(seq_fn), resolve(comb_fn)
+        mapped = self.map_values(lambda v: seq_fn(zero, v))
+        return mapped.reduce_by_key(comb_fn, zero)
+
+    def group_by_key(self, group_capacity: int = 8) -> "IDataFrame":
+        """Rows (key, (values[G], count)) at segment heads; G-bounded groups."""
+        ctx = self._ctx
+        cf = self.worker.capacity_factor
+        G = group_capacity
+
+        def node_fn(parent_results):
+            b = concat_blocks(parent_results[0])
+            sb, keys = sh.sort_block(ctx, b, lambda r: r["key"], cf)
+            heads = sh.segment_heads(keys, sb.valid)
+            n = keys.shape[0]
+            idx = jnp.arange(n)
+            raw = idx[:, None] + jnp.arange(G)[None, :]
+            gidx = jnp.clip(raw, 0, n - 1)
+            same = (keys[gidx] == keys[:, None]) & sb.valid[gidx] & (raw < n)
+            vals = jax.tree.map(lambda x: x[gidx], sb.data["value"])
+            counts = same.sum(-1)
+            return [
+                Block(
+                    {"key": sb.data["key"], "value": {"items": vals, "mask": same,
+                                                      "count": counts}},
+                    heads,
+                )
+            ]
+
+        return self._wide("groupByKey", node_fn)
+
+    def group_by(self, key_fn, group_capacity: int = 8) -> "IDataFrame":
+        return self.key_by(key_fn).group_by_key(group_capacity)
+
+    # camelCase aliases
+    sortBy = sort_by
+    sortByKey = sort_by_key
+    reduceByKey = reduce_by_key
+    aggregateByKey = aggregate_by_key
+    groupByKey = group_by_key
+    groupBy = group_by
+
+    # ------------------------------------------------------------------
+    # balancing / persistence
+    # ------------------------------------------------------------------
+    def repartition(self, k: int) -> "IDataFrame":
+        p = self._ctx.executors
+
+        def fn(parent_results):
+            return split_block(concat_blocks(parent_results[0]), k, p)
+
+        return self._wide("repartition", fn)
+
+    def partition_by(self, key_fn=None) -> "IDataFrame":
+        key_fn = resolve(key_fn) if key_fn else _pack_default
+        ctx = self._ctx
+        cf = self.worker.capacity_factor
+
+        def fn(parent_results):
+            b = concat_blocks(parent_results[0])
+            keys = jax.vmap(key_fn)(b.data)
+            k2, v2, d2, ovf = sh.hash_exchange(ctx, keys, b.valid, b.data, cf)
+            if int(jax.device_get(ovf)) > 0:
+                k2, v2, d2, _ = sh.hash_exchange(ctx, keys, b.valid, b.data,
+                                                 float(ctx.executors))
+            return [Block(d2, v2)]
+
+        return self._wide("partitionBy", fn)
+
+    partitionBy = partition_by
+
+    def compact(self) -> "IDataFrame":
+        """Compact away invalid rows (lazy node; host round-trip at eval).
+
+        Fixed shapes mean filters/joins/distinct leave masked holes and
+        capacity padding that compound across iterative fixed-point loops
+        (every new capacity is a fresh XLA compile). compact() is the
+        driver-boundary materialisation Spark performs implicitly — use it
+        after distinct() in loops (see examples/transitive_closure.py)."""
+        worker = self.worker
+
+        def fn(parent_results):
+            rows = []
+            for b in parent_results[0]:
+                rows.extend(to_host(b))
+            if not rows:  # nothing valid: keep (tiny) all-invalid parent block
+                return parent_results[0][:1]
+            return [from_host(rows, worker.executors, put=worker._put)]
+
+        return self._wide("compact", fn)
+
+    def persist(self) -> "IDataFrame":
+        self.node.cached = True
+        return self
+
+    cache = persist
+
+    def unpersist(self) -> "IDataFrame":
+        self.node.cached = False
+        self.node.result = None
+        return self
+
+    uncache = unpersist
+
+    # ------------------------------------------------------------------
+    # actions
+    # ------------------------------------------------------------------
+    def count(self) -> int:
+        total = 0
+        for b in self._blocks():
+            total += int(jax.device_get(ex.count_block(b)))
+        return total
+
+    def reduce(self, fn, identity=0):
+        fn = resolve(fn)
+        b = self._merged()
+        vfn = lambda a, c: jax.tree.map(fn, a, c)
+        out = ex.pairwise_reduce(b.data, b.valid, vfn, identity)
+        return jax.device_get(out)
+
+    tree_reduce = reduce
+    treeReduce = reduce
+
+    def aggregate(self, zero, seq_fn, comb_fn):
+        seq_fn, comb_fn = resolve(seq_fn), resolve(comb_fn)
+        return self.map(lambda r: seq_fn(zero, r)).reduce(comb_fn, zero)
+
+    treeAggregate = aggregate
+
+    def fold(self, zero, fn):
+        return self.map(lambda r: r).reduce(fn, zero)
+
+    def max(self, key_fn=None):
+        df = self if key_fn is None else self
+        b = df._merged()
+        vfn = lambda a, c: jax.tree.map(jnp.maximum, a, c)
+        return jax.device_get(ex.pairwise_reduce(b.data, b.valid, vfn, -jnp.inf))
+
+    def min(self, key_fn=None):
+        b = self._merged()
+        vfn = lambda a, c: jax.tree.map(jnp.minimum, a, c)
+        return jax.device_get(ex.pairwise_reduce(b.data, b.valid, vfn, jnp.inf))
+
+    def collect(self) -> list:
+        out = []
+        for b in self._blocks():
+            out.extend(to_host(b))
+        return out
+
+    def take(self, k: int) -> list:
+        return self.collect()[:k]
+
+    def top(self, k: int, key_fn=None) -> list:
+        key_fn = resolve(key_fn) if key_fn else (lambda r: r)
+        return self.sort_by(key_fn, ascending=False).take(k)
+
+    def count_by_key(self) -> dict:
+        ones = self.map_values(lambda v: jnp.int32(1))
+        rows = ones.reduce_by_key(lambda a, b: a + b, 0).collect()
+        return {int(np.asarray(r["key"])): int(np.asarray(r["value"])) for r in rows}
+
+    def count_by_value(self) -> dict:
+        kv = self.map(lambda r: {"key": r, "value": jnp.int32(1)})
+        rows = kv.reduce_by_key(lambda a, b: a + b, 0).collect()
+        return {int(np.asarray(r["key"])): int(np.asarray(r["value"])) for r in rows}
+
+    countByKey = count_by_key
+    countByValue = count_by_value
+
+    # ------------------------------------------------------------------
+    # I/O
+    # ------------------------------------------------------------------
+    def save_as_text_file(self, path: str):
+        with open(path, "w") as f:
+            for row in self.collect():
+                f.write(f"{_row_repr(row)}\n")
+
+    def save_as_json_file(self, path: str):
+        with open(path, "w") as f:
+            _json.dump([_row_json(r) for r in self.collect()], f)
+
+    def save_as_object_file(self, path: str):
+        np.save(path, np.asarray(self.collect(), dtype=object), allow_pickle=True)
+
+    saveAsTextFile = save_as_text_file
+    saveAsJsonFile = save_as_json_file
+    saveAsObjectFile = save_as_object_file
+
+
+def _row_repr(row):
+    if isinstance(row, dict):
+        return {k: _row_repr(v) for k, v in row.items()}
+    if isinstance(row, tuple):
+        return tuple(_row_repr(v) for v in row)
+    x = np.asarray(row)
+    return x.item() if x.ndim == 0 else x.tolist()
+
+
+def _row_json(row):
+    r = _row_repr(row)
+    if isinstance(r, tuple):
+        return list(r)
+    return r

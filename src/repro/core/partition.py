@@ -1,0 +1,104 @@
+"""Partition model (paper §3.8).
+
+A *Block* is the unit of lineage: a pytree of arrays sharing a leading row
+dim (padded to the executor count) plus a validity mask — the fixed-shape
+dataflow representation (filters mask, they don't compact; compaction
+happens at shuffles and at the driver boundary). One executor holds one
+row-shard of every block; "several partitions per executor" (IgnisHPC's fix
+over Ignis) = several blocks per PartitionSet.
+
+Row pytrees: scalars, tuples, dicts — anything jax.tree handles. KV rows are
+``{"key": k, "value": v}``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Block:
+    data: Any  # pytree of arrays, leading dim N (equal across leaves)
+    valid: jax.Array  # bool[N]
+
+    @property
+    def capacity(self) -> int:
+        return jax.tree.leaves(self.data)[0].shape[0]
+
+    def tree(self):
+        return {"data": self.data, "valid": self.valid}
+
+
+def rows_of(data) -> int:
+    return jax.tree.leaves(data)[0].shape[0]
+
+
+def pad_to(n: int, p: int) -> int:
+    return ((n + p - 1) // p) * p
+
+
+def from_host(rows, p: int, put=None) -> Block:
+    """Build a Block from host data (list of row pytrees or a pytree of
+    stacked arrays). Pads rows to a multiple of p."""
+    if isinstance(rows, list):
+        data = jax.tree.map(lambda *xs: np.stack(xs), *rows)
+    else:
+        data = jax.tree.map(np.asarray, rows)
+    n = rows_of(data)
+    cap = max(pad_to(n, p), p)
+    pad = cap - n
+
+    def padleaf(x):
+        w = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return np.pad(x, w)
+
+    data = jax.tree.map(padleaf, data)
+    valid = np.arange(cap) < n
+    if put is not None:
+        data = jax.tree.map(put, data)
+        valid = put(valid)
+    return Block(jax.tree.map(jnp.asarray, data), jnp.asarray(valid))
+
+
+def to_host(block: Block):
+    """Compact a Block to a host list of valid row pytrees (driver boundary)."""
+    valid = np.asarray(jax.device_get(block.valid))
+    data = jax.device_get(block.data)
+    idx = np.nonzero(valid)[0]
+    leaves, treedef = jax.tree.flatten(data)
+    out = []
+    for i in idx:
+        out.append(jax.tree.unflatten(treedef, [np.asarray(l[i]) for l in leaves]))
+    return out
+
+
+def concat_blocks(blocks: list[Block]) -> Block:
+    if len(blocks) == 1:
+        return blocks[0]
+    data = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *[b.data for b in blocks])
+    valid = jnp.concatenate([b.valid for b in blocks], axis=0)
+    return Block(data, valid)
+
+
+def split_block(block: Block, k: int, p: int) -> list[Block]:
+    """Split into k blocks with per-block capacity a multiple of p."""
+    n = block.capacity
+    per = max(pad_to((n + k - 1) // k, p), p)
+    out = []
+    for i in range(k):
+        lo = i * per
+        if lo >= n:
+            data = jax.tree.map(lambda x: jnp.zeros((p, *x.shape[1:]), x.dtype), block.data)
+            out.append(Block(data, jnp.zeros((p,), bool)))
+            continue
+        hi = min(lo + per, n)
+        data = jax.tree.map(lambda x: x[lo:hi], block.data)
+        valid = block.valid[lo:hi]
+        if hi - lo < per and i < k - 1:
+            pass  # middle blocks are full by construction
+        out.append(Block(data, valid))
+    return out

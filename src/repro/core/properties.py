@@ -1,0 +1,71 @@
+"""IProperties — the ignis.* configuration system (paper §3.4, Fig. 6).
+
+Dict-like with defaults, validation and prefix views. Property keys follow
+the paper's naming (``ignis.executor.instances`` …) adapted to the TPU
+runtime (executors = mesh devices).
+"""
+from __future__ import annotations
+
+DEFAULTS = {
+    "ignis.executor.image": "ignishpc/jax",
+    "ignis.executor.instances": "1",  # devices along the data axis
+    "ignis.executor.cores": "1",  # model-axis devices per executor
+    "ignis.executor.memory": "16GB",
+    "ignis.partition.type": "memory",  # memory | rawmemory | disk (paper §3.8)
+    "ignis.partition.compression": "6",
+    "ignis.partitions.per.executor": "1",
+    "ignis.driver.memory": "4GB",
+    "ignis.scheduler": "local",  # local | slurm-sim (launch/submit.py)
+    "ignis.mode": "ignis",  # ignis | spark  (spark = round-trip baseline)
+    "ignis.shuffle.capacity.factor": "2.0",
+    "ignis.join.max.matches": "8",
+    "ignis.transport.compression": "0",
+    "ignis.fault.max.retries": "2",
+}
+
+
+class IProperties:
+    def __init__(self, base: dict | None = None):
+        self._kv = dict(DEFAULTS)
+        if base:
+            self._kv.update(base)
+
+    def __getitem__(self, k):
+        return self._kv[k]
+
+    def __setitem__(self, k, v):
+        self._kv[str(k)] = str(v)
+
+    def __contains__(self, k):
+        return k in self._kv
+
+    def get(self, k, default=None):
+        return self._kv.get(k, default)
+
+    def get_int(self, k, default=0):
+        try:
+            return int(self._kv.get(k, default))
+        except ValueError:
+            return default
+
+    def get_float(self, k, default=0.0):
+        try:
+            return float(self._kv.get(k, default))
+        except ValueError:
+            return default
+
+    def get_bytes(self, k, default="0B"):
+        s = self._kv.get(k, default).upper().strip()
+        for suf, mul in (("GB", 2**30), ("MB", 2**20), ("KB", 2**10), ("B", 1)):
+            if s.endswith(suf):
+                return int(float(s[: -len(suf)]) * mul)
+        return int(float(s))
+
+    def view(self, prefix: str) -> dict:
+        return {k: v for k, v in self._kv.items() if k.startswith(prefix)}
+
+    def copy(self) -> "IProperties":
+        return IProperties(dict(self._kv))
+
+    def __repr__(self):
+        return f"IProperties({len(self._kv)} keys)"

@@ -1,0 +1,266 @@
+"""Wide (shuffle-backed) operators on the collective fabric (paper §3.6, §6.2).
+
+* PSRS distributed sort — Parallel Sorting by Regular Sampling, exactly the
+  algorithm the paper uses for TeraSort: local sort → regular samples →
+  all-gather → global pivots → bucket → all_to_all → local merge.
+* hash exchange — reduceByKey/join/partitionBy routing (MPI_Alltoall).
+* sorted segmented reduce — log-depth associative_scan over key segments
+  (the jnp oracle of kernels/segment_reduce).
+* sort-merge / hash join with bounded fan-out.
+
+All fixed-shape: buckets are capacity-padded, overflow is detected (psum)
+and the driver retries with worst-case capacity — the price of static shapes
+on a systolic machine, recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.context import IContext
+from repro.core.partition import Block
+
+
+def _sentinel(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+def _hash_u32(x):
+    """splitmix-style avalanche on int keys → uint32."""
+    h = x.astype(jnp.uint32)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x7FEB352D)
+    h = (h ^ (h >> 15)) * jnp.uint32(0x846CA68B)
+    return h ^ (h >> 16)
+
+
+# ---------------------------------------------------------------------------
+# pack-by-destination + all_to_all  (shared by PSRS and hash exchange)
+# ---------------------------------------------------------------------------
+
+
+def _pack_exchange(dest, payload, axis, p, C):
+    """Inside shard_map: route rows to `dest` buckets with capacity C.
+
+    dest: (n,) int32 in [0, p); payload: pytree of (n, …) leaves (must include
+    its own validity leaf). Returns (pytree of (p·C, …), overflow_count).
+    Dropped rows (bucket overflow) are counted, not silently lost.
+    """
+    n = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    ds = dest[order]
+    counts = jnp.bincount(ds, length=p)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(n) - starts[ds]
+    keep = pos < C
+    slot = jnp.where(keep, ds * C + pos, p * C)  # overflow → scratch slot
+    overflow = n - keep.sum()
+
+    def pack(x):
+        xs = x[order]
+        buf = jnp.zeros((p * C + 1, *x.shape[1:]), x.dtype)
+        buf = buf.at[slot].set(xs)
+        return buf[: p * C]
+
+    packed = jax.tree.map(pack, payload)
+
+    def xchg(x):
+        y = x.reshape(p, C, *x.shape[1:])
+        y = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0, tiled=False)
+        return y.reshape(p * C, *x.shape[1:])
+
+    return jax.tree.map(xchg, packed), overflow
+
+
+# ---------------------------------------------------------------------------
+# PSRS sort
+# ---------------------------------------------------------------------------
+
+
+def psrs_sort(ctx: IContext, keys, valid, data, capacity_factor=2.0):
+    """Distributed sort by `keys`. All inputs axis-sharded on dim 0.
+
+    Returns (keys', valid', data', overflow) — globally sorted (shard i holds
+    keys ≤ shard i+1), invalid rows pushed to the tail of the last shard.
+    Output has capacity_factor× the rows (padding).
+    """
+    p = ctx.executors
+    if p == 1:
+        big = _sentinel(keys.dtype)
+        k = jnp.where(valid, keys, big)
+        order = jnp.argsort(k, stable=True)
+        return (
+            keys[order],
+            valid[order],
+            jax.tree.map(lambda x: x[order], data),
+            jnp.zeros((), jnp.int32),
+        )
+
+    n_local = keys.shape[0] // p
+    C = max(int(math.ceil(capacity_factor * n_local / p)), 1)
+
+    def f(k, v, d):
+        big = _sentinel(k.dtype)
+        ks = jnp.where(v, k, big)
+        order = jnp.argsort(ks, stable=True)
+        ks, vs = ks[order], v[order]
+        ds = jax.tree.map(lambda x: x[order], d)
+        korig = k[order]
+        # regular sampling: p evenly spaced local samples
+        idx = ((jnp.arange(1, p + 1) * n_local) // (p + 1)).astype(jnp.int32)
+        samples = ks[idx]
+        all_samples = jax.lax.all_gather(samples, ctx.axis, tiled=True)  # (p·p,)
+        pivots = jnp.sort(all_samples)[p - 1 :: p][: p - 1]
+        dest = jnp.searchsorted(pivots, ks, side="right").astype(jnp.int32)
+        payload = {"k": korig, "valid": vs, "data": ds}
+        out, overflow = _pack_exchange(dest, payload, ctx.axis, p, C)
+        # local merge
+        big2 = _sentinel(out["k"].dtype)
+        km = jnp.where(out["valid"], out["k"], big2)
+        order2 = jnp.argsort(km, stable=True)
+        res = jax.tree.map(lambda x: x[order2], out)
+        return res["k"], res["valid"], res["data"], jax.lax.psum(overflow, ctx.axis)
+
+    fn = jax.shard_map(
+        f,
+        mesh=ctx.mesh,
+        in_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis)),
+        out_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis), P()),
+        check_vma=False,
+    )
+    return fn(keys, valid, data)
+
+
+def sort_block(ctx: IContext, b: Block, key_fn, capacity_factor=2.0, ascending=True):
+    keys = jax.vmap(key_fn)(b.data)
+    if not ascending:
+        keys = -keys
+    k, v, d, ovf = psrs_sort(ctx, keys, b.valid, b.data, capacity_factor)
+    if int(jax.device_get(ovf)) > 0:  # retry with worst-case capacity
+        k, v, d, ovf = psrs_sort(ctx, keys, b.valid, b.data, float(ctx.executors))
+    return Block(d, v), (k if ascending else -k)
+
+
+# ---------------------------------------------------------------------------
+# hash exchange (partitionBy / reduceByKey / join routing)
+# ---------------------------------------------------------------------------
+
+
+def hash_exchange(ctx: IContext, keys, valid, data, capacity_factor=2.0):
+    """Route rows so equal keys land on the same executor. Same-shape padded
+    output + overflow count."""
+    p = ctx.executors
+    if p == 1:
+        return keys, valid, data, jnp.zeros((), jnp.int32)
+    n_local = keys.shape[0] // p
+    C = max(int(math.ceil(capacity_factor * n_local / p)), 1)
+
+    def f(k, v, d):
+        dest = (_hash_u32(k) % jnp.uint32(p)).astype(jnp.int32)
+        dest = jnp.where(v, dest, p - 1)  # park invalid rows anywhere stable
+        payload = {"k": k, "valid": v, "data": d}
+        out, overflow = _pack_exchange(dest, payload, ctx.axis, p, C)
+        return out["k"], out["valid"], out["data"], jax.lax.psum(overflow, ctx.axis)
+
+    fn = jax.shard_map(
+        f,
+        mesh=ctx.mesh,
+        in_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis)),
+        out_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis), P()),
+        check_vma=False,
+    )
+    return fn(keys, valid, data)
+
+
+# ---------------------------------------------------------------------------
+# sorted segmented reduce (jnp oracle of kernels/segment_reduce)
+# ---------------------------------------------------------------------------
+
+
+def segment_heads(keys, valid):
+    prev = jnp.concatenate([keys[:1], keys[:-1]])
+    first = jnp.arange(keys.shape[0]) == 0
+    return valid & (first | (keys != prev) | ~jnp.concatenate([valid[:1], valid[:-1]]))
+
+
+def segmented_reduce(keys, valid, values, fn, identity):
+    """Reduce consecutive equal-key runs (keys must be sorted, invalid at
+    arbitrary positions). Returns (head_mask, reduced_values_at_heads).
+
+    fn: associative binary row fn (pytrees); identity: row pytree.
+    """
+    n = keys.shape[0]
+    heads = segment_heads(keys, valid)
+    heads_ext = heads | ~valid
+
+    vals = jax.tree.map(
+        lambda x, i: jnp.where(
+            valid.reshape((-1,) + (1,) * (x.ndim - 1)), x, jnp.asarray(i, x.dtype)
+        ),
+        values,
+        identity,
+    )
+
+    def comb(a, b):
+        va, ha = a
+        vb, hb = b
+        merged = fn(va, vb)
+        v = jax.tree.map(
+            lambda m, y: jnp.where(hb.reshape((-1,) + (1,) * (y.ndim - 1)), y, m),
+            merged,
+            vb,
+        )
+        return (v, ha | hb)
+
+    scanned, _ = jax.lax.associative_scan(comb, (vals, heads_ext))
+    # last row of each segment = (next head_ext) - 1
+    idx = jnp.arange(n)
+    head_pos = jnp.where(heads_ext, idx, n)
+    suff_min = jax.lax.cummin(head_pos[::-1])[::-1]
+    nxt = jnp.concatenate([suff_min[1:], jnp.full((1,), n)])
+    last_pos = jnp.clip(jnp.where(nxt >= n, n - 1, nxt - 1), 0, n - 1)
+    out = jax.tree.map(lambda s: s[last_pos], scanned)
+    return heads, out
+
+
+# ---------------------------------------------------------------------------
+# local (post-exchange) join with bounded fan-out
+# ---------------------------------------------------------------------------
+
+
+def local_join(lk, lvalid, lvals, rk, rvalid, rvals, max_matches: int):
+    """Sort-merge join on one shard. Returns dict rows of capacity n_left·M."""
+    big = _sentinel(rk.dtype)
+    rs = jnp.where(rvalid, rk, big)
+    order = jnp.argsort(rs, stable=True)
+    rs = rs[order]
+    rv = jax.tree.map(lambda x: x[order], rvals)
+    rvalid_s = rvalid[order]
+
+    lo = jnp.searchsorted(rs, lk, side="left")
+    hi = jnp.searchsorted(rs, lk, side="right")
+    M = max_matches
+    j = lo[:, None] + jnp.arange(M)[None, :]  # (n_left, M)
+    ok = (j < hi[:, None]) & lvalid[:, None]
+    jc = jnp.clip(j, 0, rs.shape[0] - 1)
+    ok &= rvalid_s[jc]
+    out_overflow = jnp.maximum(hi - lo - M, 0).sum()
+
+    n = lk.shape[0]
+
+    def expand_l(x):
+        return jnp.repeat(x, M, axis=0)
+
+    def take_r(x):
+        return x[jc].reshape(n * M, *x.shape[1:])
+
+    rows = {
+        "key": expand_l(lk),
+        "value": (jax.tree.map(expand_l, lvals), jax.tree.map(take_r, rv)),
+    }
+    return rows, ok.reshape(n * M), out_overflow

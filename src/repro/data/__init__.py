@@ -1,0 +1,2 @@
+from repro.data.pipeline import TrainPipeline, byte_tokenize, pack_sequences  # noqa: F401
+from repro.data.synthetic import synthetic_corpus, synthetic_batches  # noqa: F401

@@ -1,0 +1,89 @@
+"""Data pipeline built ON the dataflow layer — the paper's hybrid pattern
+(Fig. 12): Big-Data tasks (tokenize / filter / pack) prepare the data, the
+compute-intensive task (the train step) consumes it over the same fabric.
+
+Byte-level tokenizer (no external vocab), document packing into fixed
+seq_len rows with next-token labels, double-buffered host→device feed.
+"""
+from __future__ import annotations
+
+import threading
+from queue import Queue
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+BOS, EOS, PAD = 256, 257, 258
+VOCAB = 259  # bytes + specials
+
+
+def byte_tokenize(text: str) -> np.ndarray:
+    return np.frombuffer(text.encode("utf-8", errors="replace"), np.uint8).astype(np.int32)
+
+
+def pack_sequences(docs, seq_len: int) -> np.ndarray:
+    """Pack tokenized docs (list of int arrays) into (n, seq_len+1) rows
+    (the +1 column yields next-token labels)."""
+    stream: list[int] = []
+    for d in docs:
+        stream.append(BOS)
+        stream.extend(int(t) for t in d)
+        stream.append(EOS)
+    L = seq_len + 1
+    n = max(len(stream) // L, 1)
+    arr = np.full((n, L), PAD, np.int32)
+    flat = np.asarray(stream[: n * L], np.int32)
+    arr.reshape(-1)[: flat.size] = flat
+    return arr
+
+
+def batches_from_rows(rows: np.ndarray, batch: int, *, seed: int = 0,
+                      epochs: Optional[int] = None) -> Iterator[dict]:
+    """Yield {"tokens", "labels"} host batches forever (or for N epochs)."""
+    rng = np.random.default_rng(seed)
+    e = 0
+    while epochs is None or e < epochs:
+        order = rng.permutation(len(rows))
+        for i in range(0, len(order) - batch + 1, batch):
+            sel = rows[order[i : i + batch]]
+            yield {"tokens": sel[:, :-1], "labels": sel[:, 1:]}
+        e += 1
+
+
+class TrainPipeline:
+    """Double-buffered feed: a background thread stages the next host batch
+    and device_puts it while the current step runs (compute/transfer
+    overlap — one of the §Perf items)."""
+
+    def __init__(self, batch_iter: Iterator[dict], sharding=None, depth: int = 2):
+        self._it = batch_iter
+        self._sharding = sharding
+        self._q: Queue = Queue(maxsize=depth)
+        self._stop = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _put(self, x):
+        if self._sharding is not None:
+            return jax.device_put(x, self._sharding)
+        return jax.device_put(x)
+
+    def _run(self):
+        for hb in self._it:
+            if self._stop:
+                return
+            self._q.put({k: self._put(v) for k, v in hb.items()})
+        self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop = True

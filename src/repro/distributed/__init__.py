@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    batch_axes,
+    cache_specs,
+    input_specs_sharding,
+    opt_specs,
+    param_specs,
+)

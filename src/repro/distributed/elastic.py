@@ -1,0 +1,23 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh (the MPI-3
+"dynamic process join" analogue the paper leans on for replacing lost
+executors — here: replace/resize the whole slice between runs).
+
+Checkpoints store full logical arrays, so elasticity is a placement
+decision at restore: build the new mesh, derive the new sharding specs from
+the same rules, device_put. Divisibility permitting, ANY (pod, data, model)
+factorization restores the same training state.
+"""
+from __future__ import annotations
+
+from repro.checkpoint.checkpoint import restore
+from repro.distributed.sharding import opt_specs, param_specs, to_named
+
+
+def restore_elastic(ckpt_dir: str, step: int, cfg, mesh, target: dict) -> dict:
+    """Restore a train-state tree ``{"params": …[, "opt": …]}`` re-placed
+    for ``mesh`` (which may have a different shape than the one that saved)."""
+    psp = param_specs(target["params"], cfg, mesh)
+    shardings = {"params": to_named(psp, mesh)}
+    if "opt" in target:
+        shardings["opt"] = to_named(opt_specs(target["opt"], psp, cfg, mesh), mesh)
+    return restore(ckpt_dir, step, target, {**{k: None for k in target}, **shardings})

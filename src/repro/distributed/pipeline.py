@@ -1,0 +1,81 @@
+"""Pipeline parallelism: GPipe/1F1B-style microbatch streaming over a
+"stage" mesh axis with collective_permute hops (the jax-native mapping of
+the paper's point-to-point MPI layer: ppermute IS the Isend/Irecv ring).
+
+``pipeline_apply`` runs a stage-sharded stack of layers over M microbatches
+in M + S - 1 ticks; each tick every stage processes one in-flight microbatch
+and the boundary activations hop stage→stage+1 via ppermute. Compute and the
+permute overlap (async collectives) — the paper's compute/comm overlap item.
+
+Layers-per-stage params are stacked on a leading stage axis and sharded
+P("stage") so each device holds only its stage's weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_params, x_micro, stage_fn, mesh, axis: str = "stage"):
+    """stage_params: pytree with leading dim S (stages), sharded P(axis).
+    x_micro: (M, mb, …) microbatched input, replicated.
+    stage_fn(params_slice, x) -> y — one stage's compute.
+    Returns (M, mb, …) outputs (as produced by the LAST stage).
+    """
+    S = mesh.shape[axis]
+    M = x_micro.shape[0]
+    ticks = M + S - 1
+    perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def per_stage(params_s, xm):
+        # params_s: this stage's slice — shard_map keeps the (now size-1)
+        # sharded leading dim; drop it
+        params_s = jax.tree.map(lambda a: a[0], params_s)
+        sid = jax.lax.axis_index(axis)
+        buf = jnp.zeros_like(xm[0])  # in-flight activation for this stage
+        outs = jnp.zeros_like(xm)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 injects microbatch t (when valid)
+            inject = jnp.where(t < M, t, M - 1)
+            x_in = jnp.where(sid == 0, xm[inject], buf)
+            y = stage_fn(params_s, x_in)
+            # last stage emits output for microbatch (t - S + 1)
+            m_out = t - (S - 1)
+            emit = jnp.logical_and(sid == S - 1, m_out >= 0)
+            idx = jnp.clip(m_out, 0, M - 1)
+            cur = jax.lax.dynamic_slice_in_dim(outs, idx, 1, axis=0)
+            new = jnp.where(emit, y[None], cur)
+            outs = jax.lax.dynamic_update_slice_in_dim(outs, new, idx, axis=0)
+            # hop the activation ring: stage i → i+1
+            buf = jax.lax.ppermute(y, axis, perm)
+            return (buf, outs)
+
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
+        # outputs live on the last stage: broadcast to all (psum of one-hot)
+        mine = jnp.where(sid == S - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(mine, axis)
+
+    fn = jax.shard_map(
+        per_stage,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(stage_params, x_micro)
+
+
+def reference_apply(stage_params, x_micro, stage_fn):
+    """Sequential oracle: run all stages over all microbatches."""
+    S = jax.tree.leaves(stage_params)[0].shape[0]
+
+    def one(x):
+        for s in range(S):
+            ps = jax.tree.map(lambda a: a[s], stage_params)
+            x = stage_fn(ps, x)
+        return x
+
+    return jax.vmap(one)(x_micro)

@@ -1,0 +1,249 @@
+"""Sharding rules: map every param / input / cache leaf to a PartitionSpec.
+
+Name-based logical-axis rules (the MaxText "logical axes" idea without a
+parallel annotation tree): a leaf's dict path + rank decide its spec.
+
+Presets
+  dp       — weights & optimizer replicated (the paper-faithful Horovod/MPI
+             all-reduce data parallelism); batch over ("pod","data").
+  fsdp_tp  — weight rows (d_model) sharded over "data" (FSDP), columns
+             (heads / d_ff / vocab) over "model" (TP); GSPMD inserts the
+             per-layer all-gathers inside the scan.
+  *_zero1  — suffix: optimizer moments sharded over "data" even when the
+             params are replicated (ZeRO-1; beyond-paper §Perf).
+
+Decode caches shard batch over ("pod","data") and heads/head_dim over
+"model"; the batch-1 long_500k cell context-shards the KV sequence axis over
+"data" instead (distributed flash-decode — GSPMD combines the partial
+softmax with psums).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# leaf names whose matrices map (…, d_model, X): rows=fsdp(data), cols=tp(model)
+_OUT_LAST = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w1", "router", "vit_proj"}
+# leaf names whose matrices map (…, X, d_model): rows=tp(model), cols=fsdp(data)
+_IN_FIRST = {"wo", "w_down", "out_proj", "w2"}
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def lead_axes(cfg, mesh, B: int, kind: str = "train") -> tuple:
+    """Mesh axes the batch dim shards over: the largest divisible candidate.
+
+    dp preset has no TP, so the model axis is free to absorb batch (pure
+    Horovod-style DP over the whole slice); fsdp_tp reserves "model" for TP.
+    """
+    names = mesh.axis_names
+    if cfg.sharding_preset.startswith("dp"):
+        cands = [
+            tuple(names),
+            tuple(a for a in ("data", "model") if a in names),
+            batch_axes(mesh),
+            ("data",) if "data" in names else (),
+        ]
+    else:
+        cands = [batch_axes(mesh), ("data",) if "data" in names else ()]
+    for c in cands:
+        n = 1
+        for a in c:
+            n *= _axsize(mesh, a)
+        if c and B % n == 0 and B >= n:
+            return c
+    return ()
+
+
+def _axsize(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(mesh, axis_name, dim) -> bool:
+    return dim % _axsize(mesh, axis_name) == 0
+
+
+def _bsize(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= _axsize(mesh, a)
+    return n
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            return str(k.key)
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _param_spec_one(path, aval, cfg, mesh) -> P:
+    preset = cfg.sharding_preset.replace("_zero1", "")
+    if preset == "dp":
+        return P()
+    fsdp_rows = preset in ("fsdp", "fsdp_tp")  # "tp": cols only (+ZeRO-1)
+    name = _leaf_name(path)
+    rank = len(aval.shape)
+    if name == "embed" and rank == 2:
+        v, d = aval.shape
+        return P("model" if _div(mesh, "model", v) else None,
+                 "data" if (fsdp_rows and _div(mesh, "data", d)) else None)
+    if name == "lm_head" and rank == 2:
+        d, v = aval.shape
+        return P("data" if (fsdp_rows and _div(mesh, "data", d)) else None,
+                 "model" if _div(mesh, "model", v) else None)
+    # sequence-parallel attention: S carries the model axis through the
+    # attention block, so its projections must NOT column-shard over "model"
+    attn_mats = {"wq", "wk", "wv", "wo"}
+    sp = getattr(cfg, "attn_sp", False)
+    # expert parallelism: stacked expert mats (L, E, D, F) shard E over
+    # "data" (EP) + cols over "model" (TP) — GSPMD turns the dispatch
+    # scatter into the all-to-all token routing
+    if rank == 4 and name in ("w_gate", "w_up", "w_down") and _div(
+        mesh, "data", aval.shape[1]
+    ):
+        if name == "w_down":  # (L, E, F, D)
+            row = "model" if _div(mesh, "model", aval.shape[2]) else None
+            return P(None, "data", row, None)
+        col = "model" if _div(mesh, "model", aval.shape[3]) else None
+        return P(None, "data", None, col)
+    if rank >= 2 and name in _OUT_LAST:
+        r, c = aval.shape[-2], aval.shape[-1]
+        row = "data" if (fsdp_rows and _div(mesh, "data", r)) else None
+        col = "model" if (name != "router" and _div(mesh, "model", c)) else None
+        if sp and name in attn_mats:
+            col = None
+        return P(*((None,) * (rank - 2)), row, col)
+    if rank >= 2 and name in _IN_FIRST:
+        r, c = aval.shape[-2], aval.shape[-1]
+        row = "model" if _div(mesh, "model", r) else None
+        col = "data" if (fsdp_rows and _div(mesh, "data", c)) else None
+        if sp and name in attn_mats:
+            row = None
+        return P(*((None,) * (rank - 2)), row, col)
+    if name == "conv_w" and rank >= 2 and _div(mesh, "model", aval.shape[-1]):
+        return P(*((None,) * (rank - 1)), "model")
+    return P()  # norms, biases, scalars, pos tables
+
+
+def param_specs(params_tree, cfg, mesh):
+    """PartitionSpec pytree mirroring ``params_tree`` (shapes or arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec_one(path, leaf, cfg, mesh), params_tree
+    )
+
+
+def opt_specs(opt_tree, params_spec_tree, cfg, mesh):
+    """Optimizer state specs: moments mirror params (or ZeRO-1-shard them)."""
+    zero1 = cfg.sharding_preset.endswith("_zero1")
+
+    def moment(spec, leaf):
+        if not zero1:
+            return spec
+        # ZeRO-1: shard the first divisible dim over "data" if not already
+        if any(s in ("data", ("data",)) for s in spec):
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, d in enumerate(leaf.shape):
+            if parts[i] is None and _div(mesh, "data", d) and d > 1:
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    return {
+        "m": jax.tree.map(moment, params_spec_tree, opt_tree["m"]),
+        "v": jax.tree.map(moment, params_spec_tree, opt_tree["v"]),
+        "step": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# inputs / caches
+# ---------------------------------------------------------------------------
+
+
+def input_specs_sharding(inputs, cfg, mesh, kind: str = "train"):
+    """Specs for a batch dict (tokens/labels/frames/patches or decode args)."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if name in ("cache",):  # handled by cache_specs
+            return P()
+        B = leaf.shape[0] if leaf.shape else 1
+        lead = lead_axes(cfg, mesh, B, kind)
+        return P(lead, *((None,) * (len(leaf.shape) - 1))) if leaf.shape else P()
+
+    out = {}
+    for k, v in inputs.items():
+        if k == "cache":
+            out[k] = cache_specs(v, cfg, mesh)
+        else:
+            out[k] = jax.tree_util.tree_map_with_path(one, v)
+    return out
+
+
+def cache_specs(cache_tree, cfg, mesh):
+    """Decode-cache specs (see module docstring)."""
+
+    def _lead(B):
+        return lead_axes(cfg, mesh, B, "decode")
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if name in ("k", "v", "k_cross", "v_cross") and len(shape) == 5:
+            L, B, S, K, hd = shape
+            bl = _lead(B)
+            if bl:
+                bspec, sspec = bl, None
+            else:
+                bspec, sspec = None, ("data" if _div(mesh, "data", S) else None)
+            model_used = "model" in bl
+            if not model_used and _div(mesh, "model", K):
+                kspec, hspec = "model", None
+            elif not model_used and _div(mesh, "model", hd):
+                kspec, hspec = None, "model"
+            else:
+                kspec = hspec = None
+            return P(None, bspec, sspec, kspec, hspec)
+        if name == "state" and len(shape) >= 5:
+            # (..., B, H, P, N)
+            parts = [None] * len(shape)
+            B, H = shape[-4], shape[-3]
+            bl = _lead(B)
+            if bl:
+                parts[-4] = bl
+            if "model" not in bl and _div(mesh, "model", H):
+                parts[-3] = "model"
+            return P(*parts)
+        if name == "conv" and len(shape) >= 4:
+            # (..., B, w, ch)
+            parts = [None] * len(shape)
+            B, ch = shape[-3], shape[-1]
+            bl = _lead(B)
+            if bl:
+                parts[-3] = bl
+            if "model" not in bl and _div(mesh, "model", ch):
+                parts[-1] = "model"
+            return P(*parts)
+        if len(shape) == 1:  # pos, enc_len
+            bl = _lead(shape[0])
+            return P(bl) if bl else P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def to_named(tree_of_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

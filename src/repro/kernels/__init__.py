@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper, CPU auto-interpret), ref.py (pure-jnp oracle).
+
+  flash_attention — blockwise fused attention (causal/window/softcap/GQA);
+                    kills the O(S²) HBM scores traffic the §Roofline table
+                    shows dominating the jnp baseline
+  ssd_scan        — Mamba-2 SSD chunk scan (intra-chunk attention-like +
+                    carried inter-chunk state)
+  segment_reduce  — sorted segmented reduction (reduceByKey/groupBy hot path
+                    of the dataflow layer — the paper's TeraSort/K-Means side)
+  moe_route       — fused softmax + top-k + capacity positions for MoE
+                    dispatch (phi3.5 / mixtral / jamba)
+"""

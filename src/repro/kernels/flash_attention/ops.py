@@ -1,0 +1,73 @@
+"""Public wrapper: padding, CPU auto-interpret, custom_vjp.
+
+Backward pass recomputes through the jnp oracle (standard practice when only
+the fwd kernel is hand-written): fwd = Pallas kernel, bwd = vjp of ref —
+numerically consistent since both implement the same math in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _should_interpret():
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, pad)
+    return jnp.pad(x, w), s
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9)
+)
+def flash_attention(q, k, v, causal=True, window=None, softcap=0.0, q_offset=0,
+                    block_q=128, block_k=128, interpret=None):
+    return _fwd_impl(q, k, v, causal, window, softcap, q_offset, block_q, block_k,
+                     interpret)
+
+
+def _fwd_impl(q, k, v, causal, window, softcap, q_offset, block_q, block_k, interpret):
+    interpret = _should_interpret() if interpret is None else interpret
+    qp, Sq = _pad_to(q, 2, block_q)
+    kp, Skv = _pad_to(k, 2, block_k)
+    vp, _ = _pad_to(v, 2, block_k)
+    # padded kv cols are masked via kv_len; padded q rows are discarded
+    o = flash_attention_fwd(
+        qp, kp, vp, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, block_q=block_q, block_k=block_k, interpret=interpret,
+        kv_len=Skv,
+    )
+    return o[:, :, :Sq, :]
+
+
+def _vjp_fwd(q, k, v, causal, window, softcap, q_offset, block_q, block_k, interpret):
+    o = _fwd_impl(q, k, v, causal, window, softcap, q_offset, block_q, block_k,
+                  interpret)
+    return o, (q, k, v)
+
+
+def _vjp_bwd(causal, window, softcap, q_offset, block_q, block_k, interpret, res, g):
+    q, k, v = res
+
+    def f(q, k, v):
+        return attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
+        )
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Layout: q (B, H, Sq, hd); k, v (B, K, Skv, hd) with H = K·G (GQA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=0.0, q_offset=0):
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    Skv = k.shape[2]
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kk, preferred_element_type=jnp.float32)
+    s = s * (hd**-0.5)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    iq = jnp.arange(Sq)[:, None] + q_offset
+    ik = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= ik <= iq
+    if window is not None:
+        ok &= (iq - ik) < window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vv)

@@ -1,0 +1,86 @@
+"""Fused MoE routing — Pallas TPU kernel.
+
+Grid (T/bt,) sequential over token tiles; scratch carries per-expert running
+counts so capacity ordinals are globally consistent without a host round or
+a (T, E, C) dispatch tensor. Per tile: softmax (VPU), iterative top-k
+(k ≤ 2 in all assigned configs), one-hot cumsum for in-tile ordinals.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, i_ref, p_ref, keep_ref, counts, *, k, E, bt, capacity):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        counts[...] = jnp.zeros_like(counts)
+
+    logits = x_ref[...].astype(jnp.float32)  # (bt, E)
+    m = logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / e.sum(axis=-1, keepdims=True)
+
+    # iterative top-k (k is tiny: 1–2 in every assigned MoE config)
+    remaining = probs
+    ws, ids = [], []
+    for _ in range(k):
+        wi = remaining.max(axis=-1)
+        ii = jnp.argmax(remaining, axis=-1).astype(jnp.int32)
+        ws.append(wi)
+        ids.append(ii)
+        remaining = remaining - jax.nn.one_hot(ii, E, dtype=remaining.dtype) * wi[:, None]
+    w = jnp.stack(ws, axis=1)  # (bt, k)
+    idx = jnp.stack(ids, axis=1)  # (bt, k)
+    w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+
+    # ordinals within expert: carried counts + in-tile exclusive cumsum
+    oh = jax.nn.one_hot(idx.reshape(-1), E, dtype=jnp.int32)  # (bt·k, E)
+    csum = jnp.cumsum(oh, axis=0)
+    local_pos = ((csum - oh) * oh).sum(-1)  # (bt·k,)
+    base = jax.lax.dot_general(
+        oh.astype(jnp.float32), counts[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).astype(jnp.int32)  # counts gathered per assignment
+    pos = (base + local_pos).reshape(bt, k)
+
+    w_ref[...] = w
+    i_ref[...] = idx
+    p_ref[...] = pos
+    keep_ref[...] = pos < capacity
+    counts[...] = counts[...] + csum[-1:].astype(counts.dtype)
+
+
+def moe_route_fwd(logits, k: int, capacity: int, *, block_t: int = 256,
+                  interpret: bool = False):
+    """logits: (T, E), T % block_t == 0 (ops.py pads).
+    Returns (weights, idx, pos, keep) each (T, k)."""
+    T, E = logits.shape
+    bt = min(block_t, T)
+    grid = (T // bt,)
+    kern = functools.partial(_kernel, k=k, E=E, bt=bt, capacity=capacity)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, E), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T, k), jnp.bool_),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, E), jnp.int32)],
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,36 @@
+"""Public segment_reduce wrapper: masking, padding, CPU auto-interpret."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce.ref import OPS, heads_of
+from repro.kernels.segment_reduce.segment_reduce import segment_reduce_fwd
+
+
+def _should_interpret():
+    return jax.default_backend() != "tpu"
+
+
+def segment_reduce(keys, valid, values, op: str = "sum", block: int = 256,
+                   interpret=None):
+    """Inclusive segmented scan over sorted-key runs.
+
+    keys: (N,) sorted; valid: (N,); values: (N,) or (N, D).
+    Returns (heads (N,), scanned (N, …) f32) — same contract as the ref.
+    """
+    interpret = _should_interpret() if interpret is None else interpret
+    _, ident = OPS[op]
+    squeeze = values.ndim == 1
+    v = values[:, None] if squeeze else values
+    heads = heads_of(keys, valid)
+    hb = heads | ~valid
+    v = jnp.where(valid[:, None], v.astype(jnp.float32), jnp.float32(ident))
+
+    N = v.shape[0]
+    pad = (-N) % block if N > block else 0
+    if pad:
+        v = jnp.concatenate([v, jnp.full((pad, v.shape[1]), ident, v.dtype)])
+        hb = jnp.concatenate([hb, jnp.ones((pad,), bool)])
+    out = segment_reduce_fwd(v, hb, op=op, block=block, interpret=interpret)[:N]
+    return heads, (out[:, 0] if squeeze else out)

@@ -1,0 +1,41 @@
+"""Oracle: inclusive segmented scan over sorted-key runs (sum/max/min).
+
+Matches core/shuffle.segmented_reduce semantics: invalid rows are their own
+identity segments; output[i] = running reduction of row i's segment up to i.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+OPS = {
+    "sum": (jnp.add, 0.0),
+    "max": (jnp.maximum, -jnp.inf),
+    "min": (jnp.minimum, jnp.inf),
+}
+
+
+def heads_of(keys, valid):
+    prev = jnp.concatenate([keys[:1], keys[:-1]])
+    first = jnp.arange(keys.shape[0]) == 0
+    pv = jnp.concatenate([valid[:1], valid[:-1]])
+    return valid & (first | (keys != prev) | ~pv)
+
+
+def segment_reduce_ref(keys, valid, values, op: str = "sum"):
+    """keys: (N,) sorted; valid: (N,) bool; values: (N,) or (N, D).
+    Returns (heads (N,), scanned (N, …)) — inclusive segmented scan."""
+    fn, ident = OPS[op]
+    heads = heads_of(keys, valid)
+    hb = heads | ~valid
+    v = jnp.where(valid.reshape((-1,) + (1,) * (values.ndim - 1)), values,
+                  jnp.asarray(ident, values.dtype))
+
+    def comb(a, b):
+        va, ha = a
+        vb, hb_ = b
+        bc = hb_.reshape((-1,) + (1,) * (va.ndim - 1))
+        return (jnp.where(bc, vb, fn(va, vb)), ha | hb_)
+
+    scanned, _ = jax.lax.associative_scan(comb, (v, hb))
+    return heads, scanned

@@ -1,0 +1,73 @@
+"""Sorted segmented reduction — Pallas TPU kernel.
+
+Grid (n_blocks,) sequential over row tiles; scratch carries the running
+segment value across tiles. In-tile segmented inclusive scan is a
+Hillis–Steele log-depth sweep (static python loop of shifted selects —
+VPU-friendly, no HBM intermediates). Backs reduceByKey/groupBy of the
+dataflow layer (paper's TeraSort/K-Means path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_FNS = {
+    "sum": (jnp.add, 0.0),
+    "max": (jnp.maximum, -1e30),
+    "min": (jnp.minimum, 1e30),
+}
+
+
+def _kernel(v_ref, h_ref, o_ref, carry, *, bq, n_blocks, op):
+    fn, ident = _FNS[op]
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry[...] = jnp.full_like(carry, ident)
+
+    v = v_ref[...].astype(jnp.float32)  # (bq, D)
+    hb = h_ref[...]  # (bq,) bool: segment boundary (head-or-invalid)
+
+    # Hillis–Steele segmented inclusive scan
+    f = hb
+    off = 1
+    while off < bq:
+        v_sh = jnp.concatenate([jnp.full((off, v.shape[1]), ident, v.dtype), v[:-off]])
+        f_sh = jnp.concatenate([jnp.ones((off,), bool), f[:-off]])
+        v = jnp.where(f[:, None], v, fn(v, v_sh))
+        f = f | f_sh
+        off *= 2
+
+    # inject carry into the prefix that continues the previous tile's segment
+    seen = jnp.cumsum(hb.astype(jnp.int32)) > 0
+    v = jnp.where(seen[:, None], v, fn(v, carry[...]))
+    o_ref[...] = v.astype(o_ref.dtype)
+    carry[...] = v[-1:]
+
+
+def segment_reduce_fwd(values, boundaries, op: str = "sum", block: int = 256,
+                       interpret: bool = False):
+    """values: (N, D) pre-masked to identity on invalid rows; boundaries:
+    (N,) bool = head-or-invalid flags. N % block == 0 (ops.py pads).
+    Returns inclusive segmented scan (N, D) in f32."""
+    N, D = values.shape
+    bq = min(block, N)
+    n_blocks = N // bq
+    kern = functools.partial(_kernel, bq=bq, n_blocks=n_blocks, op=op)
+    return pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bq, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(values, boundaries)

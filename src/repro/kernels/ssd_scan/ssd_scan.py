@@ -1,0 +1,94 @@
+"""Mamba-2 SSD chunk scan — Pallas TPU kernel.
+
+Grid (B, H, n_chunks), chunks innermost: the (P, N) inter-chunk state lives
+in VMEM scratch across chunk steps (the recurrence is sequential anyway —
+the kernel makes that explicit instead of leaving a lax.scan to materialise
+(q, q, H) decay tensors in HBM). Intra-chunk work is two MXU matmuls
+(C·Bᵀ ⊙ decay) @ xΔ — identical math to the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, st_ref, state, *, q, n_chunks):
+    c_id = pl.program_id(2)
+
+    @pl.when(c_id == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)  # (q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (q,)
+    A = -jnp.exp(alog_ref[0].astype(jnp.float32))  # scalar
+    Bm = b_ref[0, :, 0].astype(jnp.float32)  # (q, N)
+    Cm = c_ref[0, :, 0].astype(jnp.float32)  # (q, N)
+
+    a = A * dt  # (q,) ≤ 0
+    ca = jnp.cumsum(a)
+    xdt = x * dt[:, None]
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (q, q)
+    seg = ca[:, None] - ca[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(jj <= ii, jnp.exp(seg), 0.0)
+    y_intra = jax.lax.dot_general(cb * decay, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (q, P)
+
+    h_prev = state[...]  # (P, N)
+    y_inter = jax.lax.dot_general(Cm, h_prev, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (q, P)
+    y_inter = y_inter * jnp.exp(ca)[:, None]
+
+    w_last = jnp.exp(ca[-1] - ca)  # (q,)
+    upd = jax.lax.dot_general(xdt, Bm * w_last[:, None], (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state[...] = jnp.exp(ca[-1]) * h_prev + upd
+
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(c_id == n_chunks - 1)
+    def _fin():
+        st_ref[0, 0] = state[...].astype(st_ref.dtype)
+
+
+def ssd_scan_fwd(x, dt, A_log, Bm, Cm, chunk, *, interpret=False):
+    """x: (B, S, H, P); dt: (B, S, H); A_log: (H,); Bm/Cm: (B, S, G, N).
+    S % chunk == 0. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    q = chunk
+    n_chunks = S // q
+    hpg = H // G
+    grid = (B, H, n_chunks)
+
+    kern = functools.partial(_kernel, q=q, n_chunks=n_chunks)
+    y, st = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, q, 1, N), lambda b, h, c: (b, c, h // hpg, 0)),
+            pl.BlockSpec((1, q, 1, N), lambda b, h, c: (b, c, h // hpg, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A_log, Bm, Cm)
+    return y, st

@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST come before any other import (including repro.*):
+# jax locks the device count on first init, and the production-mesh dry-run
+# needs 512 placeholder host devices. Never set this globally — smoke tests
+# and benches must see 1 device.
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+# TPU v5e roofline constants (target hardware; container runs CPU-only)
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link (collective term uses 1 link/chip)
+
+DEFAULT_JSONL = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun.jsonl"
+)
+
+
+def cell_key(arch, shape, multi_pod, tag=""):
+    base = f"{arch}|{shape}|{'multi' if multi_pod else 'single'}"
+    return f"{base}|{tag}" if tag else base
+
+
+def _parse_override(s: str):
+    k, _, v = s.partition("=")
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    if v == "None":
+        return k, None
+    return k, v
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
+             overrides: dict | None = None, tag: str = "",
+             dump_hlo: str | None = None) -> dict:
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.sharding import (
+        cache_specs,
+        input_specs_sharding,
+        opt_specs,
+        param_specs,
+        to_named,
+    )
+    from repro.launch import hlo_cost
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import build_model
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    cell = SHAPES[shape]
+    bundle = build_model(cfg)
+    rec = {
+        "key": cell_key(arch, shape, multi_pod, tag),
+        "arch": arch,
+        "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": int(chips),
+        "kind": cell.kind,
+        "tag": tag,
+        "overrides": dict(overrides or {}),
+        "ok": False,
+    }
+
+    fn, args = bundle.step_for_cell(cell)
+
+    if cell.kind == "train":
+        params_av, opt_av, batch_av = args
+        psp = param_specs(params_av, cfg, mesh)
+        in_sh = (
+            to_named(psp, mesh),
+            to_named(opt_specs(opt_av, psp, cfg, mesh), mesh),
+            to_named(input_specs_sharding(batch_av, cfg, mesh), mesh),
+        )
+        donate = (0, 1)
+    elif cell.kind == "prefill":
+        params_av, inp_av = args
+        psp = param_specs(params_av, cfg, mesh)
+        in_sh = (to_named(psp, mesh), to_named(input_specs_sharding(inp_av, cfg, mesh), mesh))
+        donate = ()
+    else:  # decode
+        params_av, cache_av, tok_av = args
+        psp = param_specs(params_av, cfg, mesh)
+        tok_sh = input_specs_sharding({"tokens": tok_av}, cfg, mesh)["tokens"]
+        in_sh = (
+            to_named(psp, mesh),
+            to_named(cache_specs(cache_av, cfg, mesh), mesh),
+            to_named(tok_sh, mesh),
+        )
+        donate = (1,)
+
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(mem)  # proves it fits
+    rec["memory"] = {
+        k: int(getattr(mem, k, 0))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+    rec["memory"]["per_device_total"] = (
+        rec["memory"]["argument_size_in_bytes"]
+        + rec["memory"]["output_size_in_bytes"]
+        + rec["memory"]["temp_size_in_bytes"]
+        - rec["memory"]["alias_size_in_bytes"]
+    )
+
+    ca = compiled.cost_analysis() or {}
+    if verbose:
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})  # FLOPs/bytes
+    rec["xla_cost"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+
+    hlo_text = compiled.as_text()
+    if dump_hlo:
+        with open(dump_hlo, "w") as f:
+            f.write(hlo_text)
+    parsed = hlo_cost.analyze(hlo_text)
+    rec["parsed"] = parsed
+    rec["top_collectives"] = hlo_cost.top_collectives(hlo_text, k=8)
+
+    # roofline terms (seconds) — per-device numbers from the SPMD module
+    compute_s = parsed["flops_per_device"] / PEAK_FLOPS
+    memory_s = parsed["hbm_bytes_per_device"] / HBM_BW
+    coll_s = parsed["wire_bytes_per_device"] / LINK_BW
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", coll_s)],
+        key=lambda t: t[1],
+    )[0]
+
+    n_active = cfg.active_param_count()
+    tokens = cell.global_batch * (cell.seq_len if cell.kind == "train" else 1)
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+    mf = (6 if cell.kind == "train" else 2) * n_active * tokens
+    hlo_total = parsed["flops_per_device"] * chips
+    rec["roofline"] = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "step_time_s": max(compute_s, memory_s, coll_s),
+        "roofline_fraction": compute_s / max(compute_s, memory_s, coll_s)
+        if max(compute_s, memory_s, coll_s) > 0
+        else 0.0,
+    }
+    rec["ok"] = True
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def load_done(jsonl_path):
+    done = {}
+    if os.path.exists(jsonl_path):
+        with open(jsonl_path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done[r["key"]] = r
+                except json.JSONDecodeError:
+                    pass
+    return done
+
+
+def append_record(jsonl_path, rec):
+    os.makedirs(os.path.dirname(jsonl_path), exist_ok=True)
+    with open(jsonl_path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def run_all(jsonl_path, multi_pod_too=True, retry_failed=False, timeout=3000):
+    from repro.configs import ASSIGNED, get_config
+
+    done = load_done(jsonl_path)
+    cells = []
+    for mp in ([False, True] if multi_pod_too else [False]):
+        for arch in ASSIGNED:
+            for cell in get_config(arch).shape_cells():
+                cells.append((arch, cell.name, mp))
+    todo = [
+        c
+        for c in cells
+        if cell_key(*c) not in done or (retry_failed and not done[cell_key(*c)].get("ok"))
+    ]
+    print(f"dry-run sweep: {len(cells)} cells, {len(cells)-len(todo)} done, {len(todo)} to go")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", ".."), env.get("PYTHONPATH", "")]
+    )
+    for i, (arch, shape, mp) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch, "--shape", shape,
+               "--jsonl", jsonl_path]
+        if mp:
+            cmd.append("--multi-pod")
+        print(f"[{i+1}/{len(todo)}] {cell_key(arch, shape, mp)}", flush=True)
+        try:
+            r = subprocess.run(cmd, env=env, timeout=timeout, capture_output=True, text=True)
+            if r.returncode != 0:
+                append_record(
+                    jsonl_path,
+                    {
+                        "key": cell_key(arch, shape, mp), "arch": arch, "shape": shape,
+                        "mesh": "multi" if mp else "single", "ok": False,
+                        "error": (r.stderr or "")[-2000:],
+                    },
+                )
+                print(f"  FAILED rc={r.returncode}: {(r.stderr or '')[-300:]}", flush=True)
+        except subprocess.TimeoutExpired:
+            append_record(
+                jsonl_path,
+                {
+                    "key": cell_key(arch, shape, mp), "arch": arch, "shape": shape,
+                    "mesh": "multi" if mp else "single", "ok": False, "error": "timeout",
+                },
+            )
+            print("  TIMEOUT", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile+roofline")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--retry-failed", action="store_true")
+    ap.add_argument("--jsonl", default=os.path.normpath(DEFAULT_JSONL))
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (perf iteration)")
+    ap.add_argument("--tag", default="", help="label for this perf variant")
+    ap.add_argument("--dump-hlo", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        run_all(args.jsonl, multi_pod_too=not args.single_pod_only,
+                retry_failed=args.retry_failed)
+        return
+
+    overrides = dict(_parse_override(s) for s in args.override)
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod,
+                       overrides=overrides, tag=args.tag, dump_hlo=args.dump_hlo)
+    except Exception:
+        rec = {
+            "key": cell_key(args.arch, args.shape, args.multi_pod, args.tag),
+            "arch": args.arch, "shape": args.shape,
+            "mesh": "multi" if args.multi_pod else "single", "tag": args.tag,
+            "ok": False, "error": traceback.format_exc()[-2000:],
+        }
+        append_record(args.jsonl, rec)
+        print(json.dumps({k: rec[k] for k in ("key", "ok")}, indent=2))
+        raise
+    append_record(args.jsonl, rec)
+    print(json.dumps(rec, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh factories.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (device count is locked on first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    kinds = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=kinds)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi-pod adds a leading 2-pod DCN axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return _mk((data, model), ("data", "model"))
+
+
+def make_pp_mesh(stages: int, data: int = 1):
+    """Pipeline-parallel mesh (stage axis first) for distributed/pipeline.py."""
+    return _mk((stages, data), ("stage", "data"))

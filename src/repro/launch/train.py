@@ -1,0 +1,149 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Production loop: sharded params/optimizer (preset rules), optional ZeRO-1
+and gradient compression, double-buffered data feed, async checkpointing,
+restart-from-latest (fault tolerance), per-step metrics.
+
+On the CPU container this trains reduced/paper-app configs for real; on a
+TPU slice the same driver scales via the same sharding rules (dry-run-proven
+at 256/512 chips).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs import get_config
+from repro.data.pipeline import TrainPipeline, batches_from_rows, pack_sequences
+from repro.data.synthetic import synthetic_batches, synthetic_corpus
+from repro.distributed.compression import compressed_grads, init_ef_state
+from repro.distributed.sharding import (
+    input_specs_sharding,
+    lead_axes,
+    opt_specs,
+    param_specs,
+    to_named,
+)
+from repro.models import build_model
+from repro.optim.schedule import warmup_cosine
+
+
+def make_train_step(bundle, cfg, *, compression="none", peak_lr=3e-4,
+                    warmup=20, total=1000):
+    from repro.optim.adamw import adamw_update
+
+    def step(params, opt, ef, batch):
+        loss, grads = jax.value_and_grad(bundle.train_loss)(params, batch)
+        if compression != "none":
+            grads, ef = compressed_grads(grads, ef, compression)
+        lr = warmup_cosine(opt["step"], peak_lr, warmup, total)
+        params, opt = adamw_update(grads, opt, params, lr=lr)
+        return params, opt, ef, loss
+
+    return step
+
+
+def train(arch="ignis-100m", steps=100, batch=8, seq_len=256, ckpt_dir=None,
+          ckpt_every=50, compression="none", data="synthetic", reduced=False,
+          mesh=None, log_every=10, resume=True, seed=0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    bundle = build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+
+    if mesh is None:
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(len(jax.devices()), 1)
+
+    params = bundle.init(key)
+    opt = bundle.init_opt(params)
+    ef = init_ef_state(params) if compression != "none" else None
+
+    psp = param_specs(params, cfg, mesh)
+    params = jax.device_put(params, to_named(psp, mesh))
+    opt = jax.device_put(opt, to_named(opt_specs(opt, psp, cfg, mesh), mesh))
+
+    start = 0
+    ckptr = None
+    if ckpt_dir:
+        ckptr = AsyncCheckpointer(ckpt_dir)
+        last = latest_step(ckpt_dir) if resume else None
+        if last is not None:
+            state = restore(ckpt_dir, last, {"params": params, "opt": opt})
+            params, opt = state["params"], state["opt"]
+            start = last
+            print(f"[train] resumed from step {last}")
+
+    step_fn = jax.jit(
+        make_train_step(bundle, cfg, compression=compression, total=steps),
+        donate_argnums=(0, 1, 2),
+    )
+
+    if data == "synthetic":
+        it = synthetic_batches(cfg.vocab_size, batch, seq_len, seed)
+    else:  # the hybrid path: dataflow-prepared corpus
+        from repro.data.pipeline import byte_tokenize
+
+        docs = [byte_tokenize(d) for d in synthetic_corpus(seed=seed)]
+        rows = pack_sequences(docs, seq_len)
+        it = batches_from_rows(rows, batch, seed=seed)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    lead = lead_axes(cfg, mesh, batch, "train")
+    bsh = NamedSharding(mesh, P(lead, None)) if lead else NamedSharding(mesh, P())
+    pipe = TrainPipeline(it, sharding=bsh)
+
+    losses = []
+    t0 = time.time()
+    for i, hb in enumerate(pipe):
+        s = start + i
+        if s >= steps:
+            break
+        batch_dev = {k: jnp.asarray(v) for k, v in hb.items()}
+        params, opt, ef, loss = step_fn(params, opt, ef, batch_dev)
+        if (s + 1) % log_every == 0 or s == steps - 1:
+            l = float(jax.device_get(loss))
+            losses.append((s + 1, l))
+            dt = time.time() - t0
+            print(f"[train] step {s+1}/{steps} loss={l:.4f} ({dt:.1f}s)", flush=True)
+        if ckptr and (s + 1) % ckpt_every == 0:
+            ckptr.save(s + 1, {"params": params, "opt": opt})
+    pipe.close()
+    if ckptr:
+        ckptr.save(steps, {"params": params, "opt": opt})
+        ckptr.wait()
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="ignis-100m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compression", default="none", choices=["none", "int8", "topk"])
+    ap.add_argument("--data", default="synthetic", choices=["synthetic", "corpus"])
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    _, _, losses = train(
+        a.arch, a.steps, a.batch, a.seq_len, a.ckpt_dir, a.ckpt_every,
+        a.compression, a.data, a.reduced, seed=a.seed,
+    )
+    print(json.dumps({"final_loss": losses[-1][1] if losses else None}))
+
+
+if __name__ == "__main__":
+    main()

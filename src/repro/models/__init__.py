@@ -1,0 +1,5 @@
+"""Model zoo: scan-over-layers JAX definitions for every assigned arch."""
+from repro.models.model_zoo import (  # noqa: F401
+    build_model,
+    analytic_param_count,
+)

@@ -1,0 +1,185 @@
+"""GQA attention: query-chunked (memory O(S·chunk)), window/causal masks,
+qk-norm, logit soft-cap, prefill + decode paths.
+
+The chunked jnp path here is also the numerical oracle for the Pallas flash
+kernel (``repro.kernels.flash_attention``); set ``use_flash=True`` on TPU to
+dispatch to it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rope, softcap
+
+NEG_INF = -1e30
+GLOBAL_WINDOW = 1 << 30  # "no window" sentinel usable inside traced selects
+
+
+def make_attn_params(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (cfg.d_model, cfg.q_dim), dtype=dtype),
+        "wk": dense_init(k2, (cfg.d_model, cfg.kv_dim), dtype=dtype),
+        "wv": dense_init(k3, (cfg.d_model, cfg.kv_dim), dtype=dtype),
+        "wo": dense_init(k4, (cfg.q_dim, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _mask_bias(pos_q, pos_kv, window, causal):
+    """(…, Sq, Skv) additive bias from position vectors. window is a traced or
+    static int; GLOBAL_WINDOW means unbounded."""
+    dq = pos_q[..., :, None]
+    dk = pos_kv[..., None, :]
+    ok = dk >= 0  # negative kv positions = padding (unwritten cache slots)
+    if causal:
+        ok &= dk <= dq
+    ok &= (dq - dk) < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _pin_sq(x, sp):
+    """Sequence-parallel: pin the Sq dim (axis -2) of score tensors to the
+    "model" axis so fwd AND bwd agree on one layout (otherwise GSPMD flips
+    between Sq- and Skv-sharded in the transpose and moves full scores)."""
+    if not sp:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    U = P.UNCONSTRAINED
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, P(*((U,) * (x.ndim - 2)), "model", U)
+        )
+    except Exception:
+        return x
+
+
+def _attend_block(q, k, v, bias, scale, cap, sp=False):
+    """q: (B,Sq,K,G,hd) k/v: (B,Skv,K,hd) bias: (B,Sq,Skv) → (B,Sq,K,G,hd)."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+    s = softcap(s * scale, cap) + bias[:, None, None, :, :]
+    s = _pin_sq(s, sp)
+    p = _pin_sq(jax.nn.softmax(s, axis=-1), sp)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+
+
+def attend(q, k, v, pos_q, pos_kv, *, window=GLOBAL_WINDOW, causal=True, cap=0.0,
+           chunk=0, sp=False):
+    """Grouped-query attention with on-the-fly masks.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, K, hd); H = K·G.
+    pos_q: (B, Sq) int32; pos_kv: (B, Skv) int32 (negative = invalid slot).
+    ``chunk`` > 0 processes queries in blocks via ``lax.map`` so the full
+    (Sq, Skv) score matrix is never materialised.
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = hd**-0.5
+    qg = q.reshape(B, Sq, K, G, hd)
+
+    if not chunk or Sq <= chunk:
+        bias = _mask_bias(pos_q, pos_kv, window, causal)
+        o = _attend_block(qg, k, v, bias, scale, cap, sp=sp)
+        return o.reshape(B, Sq, H, hd)
+
+    n = Sq // chunk
+    Sm = n * chunk
+    qs = qg[:, :Sm].reshape(B, n, chunk, K, G, hd).swapaxes(0, 1)  # (n, B, chunk, K, G, hd)
+    ps = pos_q[:, :Sm].reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # don't save per-chunk probs: recompute in bwd (flash-style)
+    def f(args):
+        qb, pb = args
+        bias = _mask_bias(pb, pos_kv, window, causal)
+        return _attend_block(qb, k, v, bias, scale, cap)
+
+    o = jax.lax.map(f, (qs, ps))  # (n, B, chunk, K, G, hd)
+    o = o.swapaxes(0, 1).reshape(B, Sm, K, G, hd)
+    if Sm < Sq:  # remainder block
+        bias = _mask_bias(pos_q[:, Sm:], pos_kv, window, causal)
+        tail = _attend_block(qg[:, Sm:], k, v, bias, scale, cap)
+        o = jnp.concatenate([o, tail], axis=1)
+    return o.reshape(B, Sq, H, hd)
+
+
+def attention(x, p, cfg, pos, *, kv=None, window=GLOBAL_WINDOW, causal=True, pos_kv=None):
+    """Full attention sub-layer for prefill/training.
+
+    x: (B, S, D). If ``kv`` (B, Skv, D) is given, computes cross-attention
+    (k/v projected from ``kv``; no RoPE on cross-attention).
+    Returns (out, (k_heads, v_heads)) — the per-head K/V for cache writes.
+
+    cfg.attn_impl == "flash" dispatches to the Pallas kernel (interpret mode
+    on CPU) when the mask is expressible (static window / causal, no
+    per-position invalidation) — scores never touch HBM on TPU.
+    """
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    src = kv if kv is not None else x
+    k = (src @ p["wk"]).reshape(B, src.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if kv is None and cfg.rope_theta:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    use_flash = (
+        cfg.attn_impl == "flash"
+        and pos_kv is None
+        and not isinstance(window, jax.core.Tracer)  # static window only
+    )
+    if use_flash:
+        from repro.kernels.flash_attention import flash_attention
+
+        win = None if (window is None or window >= GLOBAL_WINDOW) else int(window)
+        o = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal, win, cfg.attn_logit_softcap,
+            (src.shape[1] - S) if kv is None else 0,
+        ).transpose(0, 2, 1, 3)
+        return o.reshape(B, S, cfg.q_dim) @ p["wo"], (k, v)
+    if pos_kv is None:
+        pos_kv = pos if kv is None else jnp.broadcast_to(jnp.arange(src.shape[1])[None], (B, src.shape[1]))
+    o = attend(q, k, v, pos, pos_kv, window=window, causal=causal, cap=cfg.attn_logit_softcap,
+               chunk=cfg.attn_chunk, sp=cfg.attn_sp)
+    return o.reshape(B, S, cfg.q_dim) @ p["wo"], (k, v)
+
+
+def decode_attention(x, p, cfg, pos, k_cache, v_cache, *, window=GLOBAL_WINDOW):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); pos: (B,) current positions; caches: (B, Smax, K, hd).
+    Returns (out, new_k_cache, new_v_cache). Cache slots at index > pos are
+    masked via the position trick (pos_kv entries beyond pos are invalid).
+    """
+    B, _, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    k_new = (x @ p["wk"]).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    v_new = (x @ p["wv"]).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k_new = rmsnorm(k_new, p["k_norm"])
+    if cfg.rope_theta:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k_new = rope(k_new, pos[:, None], cfg.rope_theta)
+
+    # write the new K/V at `pos` (vmapped dynamic slice over batch)
+    def upd(cache, new, i):
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, i, axis=0)
+
+    k_cache = jax.vmap(upd)(k_cache, k_new.astype(k_cache.dtype), pos)
+    v_cache = jax.vmap(upd)(v_cache, v_new.astype(v_cache.dtype), pos)
+
+    Smax = k_cache.shape[1]
+    idx = jnp.arange(Smax)[None, :]  # (1, Smax)
+    pos_kv = jnp.where(idx <= pos[:, None], idx, -1)  # unwritten slots invalid
+    o = attend(q, k_cache, v_cache, pos[:, None], pos_kv, window=window, causal=True,
+               cap=cfg.attn_logit_softcap, chunk=0)
+    return o.reshape(B, 1, cfg.q_dim) @ p["wo"], k_cache, v_cache

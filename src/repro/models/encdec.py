@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder. The audio conv frontend is a STUB —
+``input_specs()`` supplies precomputed frame embeddings (B, S_enc, D); a tiny
+conv stub lives here only for the CPU smoke test.
+
+Decoder positions are a learned table sized to the requested decode length
+(the assigned decode_32k cell extends past whisper's published 448 cap — a
+table extension, not retraining; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import apply_norm, dense_init, embed_init, lm_loss, make_norm_params
+from repro.models.transformer import _remat, stack_layers
+
+
+# whisper uses a two-matrix GELU MLP (with biases), not SwiGLU
+def make_gelu_mlp_params(key, d, f, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_init(k1, (d, f), dtype=dtype),
+        "b1": jnp.zeros((f,), jnp.float32),
+        "w2": dense_init(k2, (f, d), dtype=dtype),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def gelu_mlp(x, p):
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"].astype(x.dtype))
+    return h @ p["w2"] + p["b2"].astype(x.dtype)
+
+
+def make_encdec_params(key, cfg, max_dec=None, max_enc=None):
+    dt = jnp.dtype(cfg.param_dtype)
+    max_dec = max_dec or 448
+    max_enc = max_enc or cfg.enc_seq
+    ks = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        return {
+            "ln1": make_norm_params(k, cfg.d_model, cfg.norm_type),
+            "attn": attn.make_attn_params(k, cfg, dt),
+            "ln2": make_norm_params(k, cfg.d_model, cfg.norm_type),
+            "ffn": make_gelu_mlp_params(k, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def dec_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": make_norm_params(k, cfg.d_model, cfg.norm_type),
+            "self_attn": attn.make_attn_params(k1, cfg, dt),
+            "lnx": make_norm_params(k, cfg.d_model, cfg.norm_type),
+            "cross_attn": attn.make_attn_params(k2, cfg, dt),
+            "ln2": make_norm_params(k, cfg.d_model, cfg.norm_type),
+            "ffn": make_gelu_mlp_params(k, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    return {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "pos_dec": embed_init(ks[1], (max_dec, cfg.d_model), dt),
+        "pos_enc": embed_init(ks[2], (max_enc, cfg.d_model), dt),
+        "enc_layers": stack_layers(jax.random.split(ks[3], cfg.enc_layers), enc_layer),
+        "enc_norm": make_norm_params(ks[3], cfg.d_model, cfg.norm_type),
+        "dec_layers": stack_layers(jax.random.split(ks[4], cfg.num_layers), dec_layer),
+        "dec_norm": make_norm_params(ks[4], cfg.d_model, cfg.norm_type),
+    }
+
+
+def conv_frontend_stub(audio, cfg):
+    """Smoke-test-only stand-in for whisper's mel+conv frontend: strided avg
+    pooling of raw features into (B, S/2, D)."""
+    B, S = audio.shape[0], audio.shape[1]
+    x = audio.reshape(B, S // 2, -1)
+    d = x.shape[-1]
+    if d < cfg.d_model:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, cfg.d_model - d)))
+    return x[..., : cfg.d_model]
+
+
+def encode(params, frames, cfg):
+    """frames: (B, S_enc, D) precomputed frame embeddings (frontend stub)."""
+    S = frames.shape[1]
+    x = frames + params["pos_enc"][None, :S].astype(frames.dtype)
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def layer(x, lp):
+        a, _ = attn.attention(
+            apply_norm(x, lp["ln1"], cfg.norm_type), lp["attn"], cfg, pos, causal=False
+        )
+        x = x + a
+        return x + gelu_mlp(apply_norm(x, lp["ln2"], cfg.norm_type), lp["ffn"]), None
+
+    x, _ = jax.lax.scan(_remat(layer, cfg), x, params["enc_layers"])
+    return apply_norm(x, params["enc_norm"], cfg.norm_type)
+
+
+def decode_train(params, tokens, enc_out, cfg):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) + params["pos_dec"][None, :S]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def layer(x, lp):
+        a, _ = attn.attention(
+            apply_norm(x, lp["ln1"], cfg.norm_type), lp["self_attn"], cfg, pos
+        )
+        x = x + a
+        c, _ = attn.attention(
+            apply_norm(x, lp["lnx"], cfg.norm_type), lp["cross_attn"], cfg, pos,
+            kv=enc_out, causal=False,
+        )
+        x = x + c
+        return x + gelu_mlp(apply_norm(x, lp["ln2"], cfg.norm_type), lp["ffn"]), None
+
+    x, _ = jax.lax.scan(_remat(layer, cfg), x, params["dec_layers"])
+    return apply_norm(x, params["dec_norm"], cfg.norm_type)
+
+
+def encdec_train_loss(params, batch, cfg):
+    enc_out = encode(params, batch["frames"], cfg)
+    h = decode_train(params, batch["tokens"], enc_out, cfg)
+    return lm_loss(h, params["embed"].T, batch["labels"], cfg.loss_chunk)
+
+
+def encdec_prefill(params, frames, tokens, cfg, cache_len=None):
+    """Encode audio, precompute cross K/V, prefill decoder prompt."""
+    enc_out = encode(params, frames, cfg)
+    B, S = tokens.shape
+    Smax = cache_len or S
+    x = jnp.take(params["embed"], tokens, axis=0) + params["pos_dec"][None, :S]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    Senc = enc_out.shape[1]
+
+    def layer(x, lp):
+        a, (k, v) = attn.attention(
+            apply_norm(x, lp["ln1"], cfg.norm_type), lp["self_attn"], cfg, pos
+        )
+        x = x + a
+        c, (kx, vx) = attn.attention(
+            apply_norm(x, lp["lnx"], cfg.norm_type), lp["cross_attn"], cfg, pos,
+            kv=enc_out, causal=False,
+        )
+        x = x + c
+        x = x + gelu_mlp(apply_norm(x, lp["ln2"], cfg.norm_type), lp["ffn"])
+        if Smax > S:
+            padw = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        return x, (k, v, kx, vx)
+
+    x, (ks, vs, kxs, vxs) = jax.lax.scan(layer, x, params["dec_layers"])
+    h = apply_norm(x, params["dec_norm"], cfg.norm_type)
+    logits = h[:, -1] @ params["embed"].T
+    cache = {
+        "k": ks, "v": vs, "k_cross": kxs, "v_cross": vxs,
+        "pos": jnp.full((B,), S, jnp.int32),
+        "enc_len": jnp.full((B,), Senc, jnp.int32),
+    }
+    return logits, cache
+
+
+def make_encdec_cache(cfg, batch, max_len, enc_len, dtype=jnp.bfloat16):
+    L = cfg.num_layers
+    kv = (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    kvx = (L, batch, enc_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+        "k_cross": jnp.zeros(kvx, dtype), "v_cross": jnp.zeros(kvx, dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "enc_len": jnp.full((batch,), enc_len, jnp.int32),
+    }
+
+
+def encdec_decode_step(params, cache, tokens, cfg):
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0) + jnp.take(params["pos_dec"], pos, axis=0)[
+        :, None, :
+    ]
+    Senc = cache["k_cross"].shape[2]
+    pos_kv_x = jnp.broadcast_to(jnp.arange(Senc, dtype=jnp.int32)[None], (B, Senc))
+
+    def layer(x, xs):
+        lp, k_l, v_l, kx_l, vx_l = xs
+        a, k_l, v_l = attn.decode_attention(
+            apply_norm(x, lp["ln1"], cfg.norm_type), lp["self_attn"], cfg, pos, k_l, v_l
+        )
+        x = x + a
+        # cross attention against precomputed encoder K/V
+        h = apply_norm(x, lp["lnx"], cfg.norm_type)
+        q = (h @ lp["cross_attn"]["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+        o = attn.attend(q, kx_l, vx_l, pos[:, None], pos_kv_x, causal=False)
+        x = x + o.reshape(B, 1, cfg.q_dim) @ lp["cross_attn"]["wo"]
+        x = x + gelu_mlp(apply_norm(x, lp["ln2"], cfg.norm_type), lp["ffn"])
+        return x, (k_l, v_l)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer, x, (params["dec_layers"], cache["k"], cache["v"], cache["k_cross"], cache["v_cross"])
+    )
+    h = apply_norm(x, params["dec_norm"], cfg.norm_type)
+    logits = h[:, -1] @ params["embed"].T
+    return logits, {**cache, "k": ks, "v": vs, "pos": pos + 1}

@@ -1,0 +1,197 @@
+"""Jamba-style hybrid: period-8 blocks (1 attention + 7 mamba layers), each
+layer followed by dense-MLP or MoE (alternating). 72 layers = 9 scanned
+blocks; the 8 heterogeneous slots are unrolled inside the block body so the
+HLO stays one-block sized.
+
+Attention layers carry the only KV cache (1/8 of layers) — the hybrid
+long-context win the assignment calls out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.layers import (
+    apply_norm,
+    embed_init,
+    lm_loss,
+    make_mlp_params,
+    make_norm_params,
+    mlp,
+)
+from repro.models.moe import make_moe_params, moe_apply, moe_ffn_bsd
+from repro.models.transformer import _remat, head_matrix, stack_layers
+
+N_SLOTS = 8  # cfg.attn_period
+
+
+def _n_blocks(cfg):
+    assert cfg.num_layers % cfg.attn_period == 0
+    return cfg.num_layers // cfg.attn_period
+
+
+def _slot_is_moe(i, cfg):
+    return cfg.is_moe and (i % cfg.moe_period == 1)  # odd slots → MoE
+
+
+def make_block_params(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, N_SLOTS)
+    bp = {
+        "attn": {
+            "ln1": make_norm_params(ks[0], cfg.d_model, cfg.norm_type),
+            "attn": attn.make_attn_params(ks[0], cfg, dt),
+            "ln2": make_norm_params(ks[0], cfg.d_model, cfg.norm_type),
+            "ffn": make_mlp_params(ks[0], cfg.d_model, cfg.d_ff, dt),
+        }
+    }
+    for i in range(1, N_SLOTS):
+        ffn = (
+            make_moe_params(ks[i], cfg, dt)
+            if _slot_is_moe(i, cfg)
+            else make_mlp_params(ks[i], cfg.d_model, cfg.d_ff, dt)
+        )
+        bp[f"s{i}"] = {
+            "ln1": make_norm_params(ks[i], cfg.d_model, cfg.norm_type),
+            "mixer": mamba2.make_mamba_params(ks[i], cfg, dt),
+            "ln2": make_norm_params(ks[i], cfg.d_model, cfg.norm_type),
+            "ffn": ffn,
+        }
+    return bp
+
+
+def make_hybrid_params(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    nb = _n_blocks(cfg)
+    ks = jax.random.split(key, 2 + nb)
+    return {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "lm_head": embed_init(ks[1], (cfg.d_model, cfg.vocab_size), dt),
+        "blocks": stack_layers(ks[2:], lambda k: make_block_params(k, cfg)),
+        "final_norm": make_norm_params(ks[0], cfg.d_model, cfg.norm_type),
+    }
+
+
+def _ffn_apply(x, sp, i, cfg, aux):
+    h = apply_norm(x, sp["ln2"], cfg.norm_type)
+    if _slot_is_moe(i, cfg):
+        m, a = moe_apply(h, sp["ffn"], cfg)
+        return x + m, aux + a
+    return x + mlp(h, sp["ffn"]), aux
+
+
+def hybrid_forward(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def block(carry, bp):
+        x, aux = carry
+        a, _ = attn.attention(
+            apply_norm(x, bp["attn"]["ln1"], cfg.norm_type), bp["attn"]["attn"], cfg, pos
+        )
+        x = x + a
+        x = x + mlp(apply_norm(x, bp["attn"]["ln2"], cfg.norm_type), bp["attn"]["ffn"])
+        for i in range(1, N_SLOTS):
+            sp = bp[f"s{i}"]
+            y, _t, _s = mamba2.mamba_mixer(
+                apply_norm(x, sp["ln1"], cfg.norm_type), sp["mixer"], cfg
+            )
+            x, aux = _ffn_apply(x + y, sp, i, cfg, aux)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(_remat(block, cfg), (x, 0.0), params["blocks"])
+    return apply_norm(x, params["final_norm"], cfg.norm_type), aux
+
+
+def hybrid_train_loss(params, batch, cfg):
+    h, aux = hybrid_forward(params, batch["tokens"], cfg)
+    loss = lm_loss(h, head_matrix(params, cfg), batch["labels"], cfg.loss_chunk)
+    return loss + 0.01 * aux
+
+
+def make_hybrid_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    nb = _n_blocks(cfg)
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "k": jnp.zeros((nb, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((nb, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "conv": jnp.zeros((nb, N_SLOTS - 1, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros(
+            (nb, N_SLOTS - 1, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+        ),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def hybrid_prefill(params, tokens, cfg, cache_len=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, S, _ = x.shape
+    Smax = cache_len or S
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def block(x, bp):
+        a, (k, v) = attn.attention(
+            apply_norm(x, bp["attn"]["ln1"], cfg.norm_type), bp["attn"]["attn"], cfg, pos
+        )
+        x = x + a
+        x = x + mlp(apply_norm(x, bp["attn"]["ln2"], cfg.norm_type), bp["attn"]["ffn"])
+        tails, states = [], []
+        for i in range(1, N_SLOTS):
+            sp = bp[f"s{i}"]
+            y, t, s = mamba2.mamba_mixer(
+                apply_norm(x, sp["ln1"], cfg.norm_type), sp["mixer"], cfg
+            )
+            tails.append(t)
+            states.append(s)
+            x, _ = _ffn_apply(x + y, sp, i, cfg, 0.0)
+        if Smax > S:
+            padw = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        return x, (k, v, jnp.stack(tails), jnp.stack(states))
+
+    x, (ks, vs, convs, states) = jax.lax.scan(block, x, params["blocks"])
+    h = apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = h[:, -1] @ head_matrix(params, cfg)
+    cache = {
+        "k": ks,
+        "v": vs,
+        "conv": convs,
+        "state": states,
+        "pos": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, cache
+
+
+def hybrid_decode_step(params, cache, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache["pos"]
+
+    def block(x, xs):
+        bp, k_b, v_b, conv_b, state_b = xs
+        a, k_b, v_b = attn.decode_attention(
+            apply_norm(x, bp["attn"]["ln1"], cfg.norm_type), bp["attn"]["attn"], cfg, pos,
+            k_b, v_b,
+        )
+        x = x + a
+        x = x + mlp(apply_norm(x, bp["attn"]["ln2"], cfg.norm_type), bp["attn"]["ffn"])
+        convs, states = [], []
+        for i in range(1, N_SLOTS):
+            sp = bp[f"s{i}"]
+            y, c, s = mamba2.mamba_mixer_decode(
+                apply_norm(x, sp["ln1"], cfg.norm_type), sp["mixer"], cfg,
+                conv_b[i - 1], state_b[i - 1],
+            )
+            convs.append(c)
+            states.append(s)
+            x, _ = _ffn_apply(x + y, sp, i, cfg, 0.0)
+        return x, (k_b, v_b, jnp.stack(convs), jnp.stack(states))
+
+    x, (ks, vs, convs, states) = jax.lax.scan(
+        block, x, (params["blocks"], cache["k"], cache["v"], cache["conv"], cache["state"])
+    )
+    h = apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = h[:, -1] @ head_matrix(params, cfg)
+    return logits, {"k": ks, "v": vs, "conv": convs, "state": states, "pos": pos + 1}

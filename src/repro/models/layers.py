@@ -1,0 +1,165 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, chunked losses.
+
+All parameters are plain dict pytrees; initializers take an explicit PRNG key.
+Compute dtype is bf16 by default with fp32 softmax/norm/loss accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """Truncated-normal fan-in init (as used by llama-family codebases)."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale=None, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        x = x * (1.0 + scale.astype(jnp.float32))
+    return x.astype(dt)
+
+
+def layernorm(x, scale=None, bias=None, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def make_norm_params(key, d, norm_type):
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}  # (1 + scale) convention
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    if norm_type == "nonparam_ln":  # olmo: non-parametric LayerNorm
+        return {}
+    raise ValueError(norm_type)
+
+
+def apply_norm(x, p, norm_type):
+    if norm_type == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    if norm_type == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    if norm_type == "nonparam_ln":
+        return layernorm(x)
+    raise ValueError(norm_type)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta):
+    """Apply rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    if not theta:
+        return x
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (np.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def make_mlp_params(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f), dtype=dtype),
+        "w_up": dense_init(k2, (d, f), dtype=dtype),
+        "w_down": dense_init(k3, (f, d), dtype=dtype),
+    }
+
+
+def mlp(x, p):
+    g = jax.nn.silu(x @ p["w_gate"])
+    u = x @ p["w_up"]
+    return (g * u) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# LM head / loss
+# ---------------------------------------------------------------------------
+
+
+def lm_logits(h, head):
+    """h: (B, S, D); head: (D, V) (already transposed if tied)."""
+    return h @ head
+
+
+def _ce_block(logits, labels):
+    """fp32 cross-entropy; labels < 0 are masked out. Returns (sum, count)."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    return ce.sum(), mask.sum()
+
+
+def lm_loss(h, head, labels, chunk=0):
+    """Cross-entropy over the vocabulary.
+
+    ``chunk`` > 0 computes logits in sequence chunks via ``lax.map`` so the
+    (B, S, V) tensor is never materialised (needed for 262k vocabularies).
+    """
+    if not chunk or h.shape[1] <= chunk:
+        s, c = _ce_block(lm_logits(h, head), labels)
+        return s / jnp.maximum(c, 1)
+    B, S, _ = h.shape
+    n = S // chunk
+    hs = h[:, : n * chunk].reshape(B, n, chunk, -1).swapaxes(0, 1)
+    ls = labels[:, : n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+
+    def f(args):
+        hb, lb = args
+        return _ce_block(lm_logits(hb, head), lb)
+
+    sums, counts = jax.lax.map(f, (hs, ls))
+    tail_s = tail_c = 0.0
+    if n * chunk < S:
+        tail_s, tail_c = _ce_block(lm_logits(h[:, n * chunk :], head), labels[:, n * chunk :])
+    return (sums.sum() + tail_s) / jnp.maximum(counts.sum() + tail_c, 1)
+
+
+def softcap(x, cap):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

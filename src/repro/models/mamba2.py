@@ -1,0 +1,195 @@
+"""Mamba-2 block: SSD (state-space duality) with chunked scan.
+
+The chunked SSD here (``ssd_chunked``) is the numerical oracle for the Pallas
+kernel in ``repro.kernels.ssd_scan``. Within a chunk the recurrence is
+computed attention-style (decay-masked C·Bᵀ scores); across chunks a small
+``lax.scan`` carries the (H, P, N) state — O(S) work, O(S·chunk) memory.
+
+Decode is the O(1) recurrent update: h ← exp(Δ·A)·h + Δ·B⊗x ; y = C·h + D·x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A_log, Bm, Cm, chunk, init_state=None):
+    """Chunked SSD as a scan over chunks.
+
+    x:  (b, s, h, p)   inputs per head (already Δ-scaled is NOT expected here)
+    dt: (b, s, h)      positive step sizes (softplus already applied)
+    A_log: (h,)        A = -exp(A_log)
+    Bm, Cm: (b, s, g, n) input/output projections per group (g divides h)
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+
+    One chunk's (b, h, q, q) decay tensor is live at a time — the recurrence
+    is sequential across chunks anyway, and the all-chunks-at-once einsum
+    materialised (b, c, h, q, q) in HBM (1.3 TB/device for the jamba train
+    cell; see EXPERIMENTS.md §Perf). Same structure as the Pallas kernel.
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    s_real = s
+    pad = (-s) % chunk
+    if pad:  # zero-pad the tail: dt=0 ⇒ decay 1, input 0 — a state no-op
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    c, q = s // chunk, chunk
+    hpg = h // g
+
+    a = (-jnp.exp(A_log.astype(jnp.float32)))[None, None] * dt.astype(jnp.float32)  # (b,s,h) ≤ 0
+    xdt = x * dt[..., None].astype(x.dtype)
+
+    # chunk-major for the scan
+    a_ = a.reshape(b, c, q, h).transpose(1, 0, 2, 3)  # (c,b,q,h)
+    x_ = xdt.reshape(b, c, q, h, p).transpose(1, 0, 2, 3, 4)
+    B_ = Bm.reshape(b, c, q, g, n).transpose(1, 0, 2, 3, 4)
+    C_ = Cm.reshape(b, c, q, g, n).transpose(1, 0, 2, 3, 4)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    def step(hs, inp):
+        a_c, x_c, B_c, C_c = inp  # (b,q,h) (b,q,h,p) (b,q,g,n) (b,q,g,n)
+        ca = jnp.cumsum(a_c, axis=1)  # (b,q,h)
+        # intra-chunk: scores[i,j] = (C_i·B_j)·exp(ca_i − ca_j), j ≤ i
+        cb = jnp.einsum("bign,bjgn->bgij", C_c, B_c,
+                        preferred_element_type=jnp.float32)
+        seg = ca[:, :, None, :] - ca[:, None, :, :]  # (b,i,j,h)
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        cbh = jnp.repeat(cb, hpg, axis=1)  # (b,h,i,j)
+        w_ij = cbh * jnp.moveaxis(decay, -1, 1)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w_ij.astype(x.dtype), x_c)
+        # inter-chunk from the carried state
+        Ch = jnp.repeat(C_c, hpg, axis=2)  # (b,q,h,n)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", Ch.astype(x.dtype),
+                             hs.astype(x.dtype))
+        y_inter = y_inter * jnp.exp(ca)[..., None].astype(x.dtype)
+        # state update
+        wlast = jnp.exp(ca[:, -1:, :] - ca)  # (b,q,h)
+        Bh = jnp.repeat(B_c, hpg, axis=2)  # (b,q,h,n)
+        st = jnp.einsum("bqh,bqhn,bqhp->bhpn", wlast.astype(x.dtype),
+                        Bh.astype(x.dtype), x_c)
+        hs_new = jnp.exp(ca[:, -1, :])[:, :, None, None] * hs + st.astype(jnp.float32)
+        return hs_new, (y_intra + y_inter)
+
+    final, ys = jax.lax.scan(step, h0, (a_, x_, B_, C_))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y[:, :s_real], final
+
+
+def ssd_decode(state, x, dt, A_log, Bm, Cm):
+    """One-step recurrence. state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    Bm, Cm: (b,g,n). Returns (y (b,h,p), new_state)."""
+    b, h, p = x.shape
+    g, n = Bm.shape[1], Bm.shape[2]
+    hpg = h // g
+    a = jnp.exp((-jnp.exp(A_log.astype(jnp.float32)))[None] * dt.astype(jnp.float32))  # (b,h)
+    Bh = jnp.repeat(Bm, hpg, axis=1)  # (b,h,n)
+    Ch = jnp.repeat(Cm, hpg, axis=1)
+    upd = (x * dt[..., None])[..., :, None] * Bh[..., None, :]  # (b,h,p,n)
+    state = a[..., None, None] * state + upd.astype(state.dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(state.dtype))
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 mixer layer
+# ---------------------------------------------------------------------------
+
+
+def make_mamba_params(key, cfg, dtype):
+    D = cfg.d_model
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj → [z (di), xBC (di + 2gn), dt (h)]
+        "in_proj": dense_init(ks[0], (D, 2 * di + 2 * g * n + h), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "Dskip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, D), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (b, s, ch); w: (width, ch)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is tiny (4): unrolled shifts beat conv here
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :].astype(x.dtype)
+
+
+def mamba_mixer(x, p, cfg):
+    """x: (b, s, D) → (y (b, s, D), conv_tail (b, width-1, conv_dim), final_state).
+
+    ``conv_tail`` is the raw (pre-conv) tail of xBC — the decode conv cache.
+    """
+    b, s, D = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_headdim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    conv_tail = xBC[:, -(cfg.ssm_conv - 1) :, :]
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(xBC, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+
+    y, state = ssd_chunked(
+        xs.reshape(b, s, h, ph),
+        dt,
+        p["A_log"],
+        Bm.reshape(b, s, g, n),
+        Cm.reshape(b, s, g, n),
+        cfg.ssm_chunk,
+    )
+    y = y + xs.reshape(b, s, h, ph) * p["Dskip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])  # gated RMSNorm (mamba2)
+    return y @ p["out_proj"], conv_tail, state
+
+
+def mamba_mixer_decode(x, p, cfg, conv_cache, state):
+    """One-token decode. x: (b, 1, D); conv_cache: (b, width-1, conv_dim);
+    state: (b, h, p, n). Returns (y (b,1,D), new_conv_cache, new_state)."""
+    b, _, D = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_headdim
+
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    window = jnp.concatenate([conv_cache, xBC[:, None, :]], axis=1)  # (b, width, ch)
+    conv = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x.dtype))
+    xBC = jax.nn.silu(conv + p["conv_b"][None].astype(x.dtype))
+    xs, Bm, Cm = jnp.split(xBC, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])
+
+    y, state = ssd_decode(
+        state, xs.reshape(b, h, ph), dt, p["A_log"], Bm.reshape(b, g, n), Cm.reshape(b, g, n)
+    )
+    y = y + xs.reshape(b, h, ph) * p["Dskip"][None, :, None].astype(x.dtype)
+    y = y.reshape(b, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return (y @ p["out_proj"])[:, None, :], window[:, 1:], state

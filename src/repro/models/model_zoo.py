@@ -1,0 +1,235 @@
+"""build_model(cfg): one uniform bundle per architecture family.
+
+Bundle surface (everything the launcher / dry-run / serving engine needs):
+  init(key)                      → params
+  train_loss(params, batch)     → scalar loss
+  train_step(params, opt, batch)→ (params, opt, metrics)
+  prefill(params, inputs)       → (logits, cache)
+  decode_step(params, cache, tokens) → (logits, cache)
+  input_specs(cell)             → abstract args for the cell's step function
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.optim.adamw import adamw_update, init_opt_state
+
+VIT_DIM = 1024  # stub InternViT embedding width
+WHISPER_TRAIN_ENC = 1500  # encoder frames for the train cell
+WHISPER_PREFILL_DEC = 256  # decoder prompt length for the prefill cell
+
+
+@dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    make_cache: Callable  # (batch, max_len) -> cache pytree (concrete zeros)
+
+    def train_step(self, params, opt_state, batch, lr=3e-4):
+        A = self.cfg.grad_accum
+        if A <= 1:
+            loss, grads = jax.value_and_grad(self.train_loss)(params, batch)
+            if self.cfg.grad_compress != "none":
+                from repro.distributed.compression import compressed_grads
+
+                # stateless form for the dry-run path (EF state lives in the
+                # real train loop, launch/train.py)
+                zeros = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+                grads, _ = compressed_grads(grads, zeros, self.cfg.grad_compress)
+        else:
+            # microbatch accumulation: activation residency ÷ A (the global
+            # batch is a schedule choice, not a memory obligation)
+            micro = jax.tree.map(
+                lambda x: x.reshape(A, x.shape[0] // A, *x.shape[1:]), batch
+            )
+
+            def step(acc, mb):
+                g_sum, l_sum = acc
+                l, g = jax.value_and_grad(self.train_loss)(params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_sum, g
+                )
+                return (g_sum, l_sum + l), None
+
+            # seed the accumulator from microbatch 0 so it inherits the
+            # grads' natural sharding (a zeros-init accumulator is unsharded
+            # → GSPMD would all-reduce FULL grads every microbatch)
+            l0, g0 = jax.value_and_grad(self.train_loss)(
+                params, jax.tree.map(lambda x: x[0], micro)
+            )
+            g0 = jax.tree.map(lambda g: g.astype(jnp.float32), g0)
+            rest = jax.tree.map(lambda x: x[1:], micro)
+            (g_sum, l_sum), _ = jax.lax.scan(step, (g0, l0), rest)
+            grads = jax.tree.map(lambda g: (g / A), g_sum)
+            loss = l_sum / A
+        params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+        return params, opt_state, loss
+
+    def init_opt(self, params):
+        return init_opt_state(params, jnp.dtype(self.cfg.opt_moment_dtype))
+
+    # ------------------------------------------------------------------
+    # abstract inputs per shape cell (ShapeDtypeStruct — no allocation)
+    # ------------------------------------------------------------------
+    def input_specs(self, cell: ShapeCell) -> dict[str, Any]:
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+
+        if cfg.family == "audio":
+            if cell.kind == "train":
+                return {
+                    "frames": sds((B, WHISPER_TRAIN_ENC, cfg.d_model), jnp.bfloat16),
+                    "tokens": sds((B, S), i32),
+                    "labels": sds((B, S), i32),
+                }
+            if cell.kind == "prefill":
+                return {
+                    "frames": sds((B, S, cfg.d_model), jnp.bfloat16),
+                    "tokens": sds((B, WHISPER_PREFILL_DEC), i32),
+                }
+            cache = jax.eval_shape(
+                lambda: encdec.make_encdec_cache(cfg, B, S, cfg.enc_seq)
+            )
+            return {"cache": cache, "tokens": sds((B, 1), i32)}
+
+        if cfg.family == "vlm":
+            P = cfg.num_patches
+            if cell.kind == "train":
+                return {
+                    "tokens": sds((B, S - P), i32),
+                    "labels": sds((B, S - P), i32),
+                    "patches": sds((B, P, VIT_DIM), jnp.bfloat16),
+                }
+            if cell.kind == "prefill":
+                return {
+                    "tokens": sds((B, S - P), i32),
+                    "patches": sds((B, P, VIT_DIM), jnp.bfloat16),
+                }
+            cache = jax.eval_shape(lambda: self.make_cache(B, S))
+            return {"cache": cache, "tokens": sds((B, 1), i32)}
+
+        # plain LM families: dense / moe / ssm / hybrid
+        if cell.kind == "train":
+            return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cell.kind == "prefill":
+            return {"tokens": sds((B, S), i32)}
+        cache = jax.eval_shape(lambda: self.make_cache(B, S))
+        return {"cache": cache, "tokens": sds((B, 1), i32)}
+
+    def abstract_params(self, key=None):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def step_for_cell(self, cell: ShapeCell):
+        """(callable, abstract-args tuple) for lower()/compile()."""
+        specs = self.input_specs(cell)
+        params = self.abstract_params()
+        if cell.kind == "train":
+            opt = jax.eval_shape(self.init_opt, params)
+            fn = lambda p, o, b: self.train_step(p, o, b)
+            return fn, (params, opt, specs)
+        if cell.kind == "prefill":
+            fn = lambda p, inputs: self.prefill(p, **inputs)
+            return fn, (params, specs)
+        fn = lambda p, cache, tok: self.decode_step(p, cache, tok)
+        return fn, (params, specs["cache"], specs["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# family builders
+# ---------------------------------------------------------------------------
+
+
+def _max_dec_for(cfg):
+    # whisper learned decoder positions must cover the largest assigned cell
+    return 32_768
+
+
+def build_model(cfg: ArchConfig, *, max_dec=None) -> ModelBundle:
+    f = cfg.family
+    if f in ("dense", "moe", "vlm"):
+        return ModelBundle(
+            cfg=cfg,
+            init=functools.partial(transformer.make_lm_params, cfg=cfg),
+            train_loss=functools.partial(transformer.lm_train_loss, cfg=cfg),
+            prefill=lambda params, **inp: transformer.lm_prefill(
+                params, inp["tokens"], cfg, cache_len=inp.get("cache_len"),
+                patches=inp.get("patches")
+            ),
+            decode_step=lambda params, cache, tok: transformer.lm_decode_step(
+                params, cache, tok, cfg
+            ),
+            make_cache=lambda batch, max_len: transformer.make_cache(cfg, batch, max_len),
+        )
+    if f == "ssm":
+        return ModelBundle(
+            cfg=cfg,
+            init=functools.partial(ssm.make_ssm_params, cfg=cfg),
+            train_loss=functools.partial(ssm.ssm_train_loss, cfg=cfg),
+            prefill=lambda params, **inp: ssm.ssm_prefill(params, inp["tokens"], cfg),
+            decode_step=lambda params, cache, tok: ssm.ssm_decode_step(params, cache, tok, cfg),
+            make_cache=lambda batch, max_len: ssm.make_ssm_cache(cfg, batch),
+        )
+    if f == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init=functools.partial(hybrid.make_hybrid_params, cfg=cfg),
+            train_loss=functools.partial(hybrid.hybrid_train_loss, cfg=cfg),
+            prefill=lambda params, **inp: hybrid.hybrid_prefill(params, inp["tokens"], cfg),
+            decode_step=lambda params, cache, tok: hybrid.hybrid_decode_step(
+                params, cache, tok, cfg
+            ),
+            make_cache=lambda batch, max_len: hybrid.make_hybrid_cache(cfg, batch, max_len),
+        )
+    if f == "audio":
+        md = max_dec or _max_dec_for(cfg)
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: encdec.make_encdec_params(key, cfg, max_dec=md, max_enc=32_768),
+            train_loss=functools.partial(encdec.encdec_train_loss, cfg=cfg),
+            prefill=lambda params, **inp: encdec.encdec_prefill(
+                params, inp["frames"], inp["tokens"], cfg
+            ),
+            decode_step=lambda params, cache, tok: encdec.encdec_decode_step(
+                params, cache, tok, cfg
+            ),
+            make_cache=lambda batch, max_len: encdec.make_encdec_cache(
+                cfg, batch, max_len, cfg.enc_seq
+            ),
+        )
+    raise ValueError(f"unknown family {f!r}")
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (MODEL_FLOPS = 6·N·D)
+# ---------------------------------------------------------------------------
+
+
+def analytic_param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    bundle = build_model(cfg)
+    shapes = bundle.abstract_params()
+    total = int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+    if active_only and cfg.is_moe:
+        # subtract the unused expert fraction: each MoE layer activates k of E
+        E, K, D, F = cfg.num_experts, cfg.experts_per_token, cfg.d_model, cfg.d_ff
+        per_moe_layer = E * 3 * D * F
+        if cfg.family == "hybrid":
+            n_moe = (cfg.num_layers // cfg.attn_period) * sum(
+                1 for i in range(1, hybrid.N_SLOTS) if i % cfg.moe_period == 1
+            )
+        else:
+            n_moe = sum(1 for i in range(cfg.num_layers) if i % cfg.moe_period == 0)
+        total -= int(n_moe * per_moe_layer * (1 - K / E))
+    return total

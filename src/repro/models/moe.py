@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN with sort-based (gather/scatter) dispatch.
+
+TPU-idiomatic: instead of the dense one-hot dispatch einsum (which
+materialises a (tokens × experts × capacity) tensor), tokens are argsorted by
+expert id, packed into an (E, capacity, D) buffer with capacity dropping, run
+through batched per-expert SwiGLU matmuls, and scattered back with their
+router weights. Load-balancing auxiliary loss follows Switch/ST-MoE.
+
+Expert parallelism: shard the leading E axis of the expert weights over the
+"model" mesh axis (see distributed/sharding.py); GSPMD turns the gather/
+scatter into all-to-all routing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def make_moe_params(key, cfg, dtype):
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (D, E), dtype=jnp.float32),
+        "w_gate": dense_init(k2, (E, D, F), in_axis=-2, dtype=dtype),
+        "w_up": dense_init(k3, (E, D, F), in_axis=-2, dtype=dtype),
+        "w_down": dense_init(k4, (E, F, D), in_axis=-2, dtype=dtype),
+    }
+
+
+def capacity_for(cfg, tokens: int) -> int:
+    cap = int(cfg.capacity_factor * tokens * cfg.experts_per_token / cfg.num_experts)
+    return max(cap, cfg.experts_per_token, 1)
+
+
+def route(x, router, k):
+    """Router: returns (weights (T,k), expert ids (T,k), probs (T,E))."""
+    logits = x.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)  # renormalise top-k
+    return w, idx, probs
+
+
+def _pin_experts(x, cfg):
+    """EP boundary: pin the (small) dispatch/combine buffers REPLICATED.
+
+    The index-based scatter/gather between "data"-sharded tokens and
+    E-sharded buffers defeats GSPMD (it all-reduces full f32 buffers per
+    read). With the (E, C, D) buffer replicated, the scatter is a local
+    partial + ONE bf16 all-reduce, the expert einsums keep their EP/TP
+    sharding from the weights, and the combine gather is local."""
+    if not getattr(cfg, "moe_ep", False):
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*((None,) * x.ndim)))
+    except Exception:
+        return x
+
+
+def moe_ffn(x, p, cfg, capacity: int | None = None):
+    """x: (T, D) flat tokens → (y (T, D), aux_loss scalar)."""
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = capacity if capacity is not None else capacity_for(cfg, T)
+
+    w, idx, probs = route(x, p["router"], K)
+
+    e_flat = idx.reshape(-1)  # (T·K,) expert of each assignment
+    t_flat = jnp.repeat(jnp.arange(T), K)  # token of each assignment
+    w_flat = w.reshape(-1).astype(x.dtype)
+
+    order = jnp.argsort(e_flat, stable=True)  # group assignments by expert
+    es, ts, ws = e_flat[order], t_flat[order], w_flat[order]
+
+    counts = jnp.bincount(e_flat, length=E)  # tokens per expert
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * K) - starts[es]  # rank within its expert
+    keep = pos < C
+    slot = es * C + jnp.where(keep, pos, 0)
+
+    # pack: (E·C, D) buffer; dropped assignments contribute zero
+    buf = jnp.zeros((E * C, D), x.dtype).at[slot].add(x[ts] * keep[:, None].astype(x.dtype))
+    xe = _pin_experts(buf.reshape(E, C, D), cfg)
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])
+    ye = _pin_experts(ye, cfg).reshape(E * C, D)
+
+    # unpack: scatter-add weighted expert outputs back to tokens
+    contrib = ye[slot] * (ws * keep.astype(ws.dtype))[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[ts].add(contrib)
+
+    # Switch-style load balancing: E · Σ_e f_e · P_e
+    f = jnp.bincount(e_flat, length=E).astype(jnp.float32) / (T * K)
+    P = probs.mean(axis=0)
+    aux = E * jnp.sum(f * P)
+    return y, aux
+
+
+def moe_ffn_bsd(x, p, cfg):
+    """(B, S, D) wrapper: flattens tokens, restores shape."""
+    B, S, D = x.shape
+    y, aux = moe_ffn(x.reshape(B * S, D), p, cfg)
+    return y.reshape(B, S, D), aux
+
+
+def moe_apply(x, p, cfg):
+    """(B, S, D) MoE with automatic path choice: explicit shard_map expert
+    parallelism when the mesh allows it, GSPMD auto-sharding otherwise."""
+    from repro.models.moe_ep import ep_applicable, moe_ffn_bsd_ep
+
+    try:
+        if ep_applicable(cfg):
+            return moe_ffn_bsd_ep(x, p, cfg)
+    except Exception:
+        pass
+    return moe_ffn_bsd(x, p, cfg)

@@ -1,0 +1,96 @@
+"""Attention-free SSM LM (mamba2-780m): embed → N × (norm + mamba2 mixer) → head.
+
+Decode state is O(1): per-layer (conv_tail, ssm_state) — no KV cache, which is
+what makes the long_500k cell trivial for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2
+from repro.models.layers import apply_norm, embed_init, lm_loss, make_norm_params
+from repro.models.transformer import _remat, head_matrix, stack_layers
+
+
+def make_ssm_params(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2 + cfg.num_layers)
+
+    def one(k):
+        return {
+            "ln": make_norm_params(k, cfg.d_model, cfg.norm_type),
+            "mixer": mamba2.make_mamba_params(k, cfg, dt),
+        }
+
+    params = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "layers": stack_layers(ks[2:], one),
+        "final_norm": make_norm_params(ks[1], cfg.d_model, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[1], (cfg.d_model, cfg.vocab_size), dt)
+    return params
+
+
+def ssm_forward(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def layer(x, lp):
+        y, _tail, _st = mamba2.mamba_mixer(apply_norm(x, lp["ln"], cfg.norm_type), lp["mixer"], cfg)
+        return x + y, None
+
+    x, _ = jax.lax.scan(_remat(layer, cfg), x, params["layers"])
+    return apply_norm(x, params["final_norm"], cfg.norm_type)
+
+
+def ssm_train_loss(params, batch, cfg):
+    h = ssm_forward(params, batch["tokens"], cfg)
+    return lm_loss(h, head_matrix(params, cfg), batch["labels"], cfg.loss_chunk)
+
+
+def make_ssm_cache(cfg, batch, dtype=jnp.bfloat16):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros(
+            (cfg.num_layers, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+        ),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def ssm_prefill(params, tokens, cfg):
+    """Returns (last logits, cache) — cache is the O(1) recurrent state."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def layer(x, lp):
+        y, tail, st = mamba2.mamba_mixer(apply_norm(x, lp["ln"], cfg.norm_type), lp["mixer"], cfg)
+        return x + y, (tail, st)
+
+    x, (tails, states) = jax.lax.scan(layer, x, params["layers"])
+    h = apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = h[:, -1] @ head_matrix(params, cfg)
+    B = tokens.shape[0]
+    cache = {
+        "conv": tails,
+        "state": states,
+        "pos": jnp.full((B,), tokens.shape[1], jnp.int32),
+    }
+    return logits, cache
+
+
+def ssm_decode_step(params, cache, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, 1, D)
+
+    def layer(x, xs):
+        lp, conv_l, st_l = xs
+        y, conv_l, st_l = mamba2.mamba_mixer_decode(
+            apply_norm(x, lp["ln"], cfg.norm_type), lp["mixer"], cfg, conv_l, st_l
+        )
+        return x + y, (conv_l, st_l)
+
+    x, (convs, states) = jax.lax.scan(layer, x, (params["layers"], cache["conv"], cache["state"]))
+    h = apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = h[:, -1] @ head_matrix(params, cfg)
+    return logits, {"conv": convs, "state": states, "pos": cache["pos"] + 1}

@@ -1,0 +1,44 @@
+"""AdamW in pure JAX (no optax). Moments are stored in a configurable dtype
+(fp32 default; bf16 for the 398B config to fit HBM) and updated in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_opt_state(params, moment_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, dtype=moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads, opt_state, params, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1
+):
+    """Returns (new_params, new_opt_state). lr may be a scalar or traced."""
+    step = opt_state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / c1
+        vhat = vf / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+            mf.astype(m.dtype),
+            vf.astype(v.dtype),
+        )
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,124 @@
+"""Continuous-batching serve engine.
+
+Fixed-slot design (static shapes): the KV cache is a (slots, …) slab; new
+requests are admitted into free slots via single-row prefill, every engine
+step runs ONE batched decode over all live slots, finished requests retire
+and free their slot. Straggler mitigation at the serving layer: a request
+exceeding its token budget is preempted (retired with truncation flag).
+
+The decode step is jit-compiled once per (model, slots, cache_len) — slot
+state updates are pure-functional cache swaps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (Lp,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # runtime
+    tokens: list = field(default_factory=list)
+    done: bool = False
+    truncated: bool = False
+
+
+class ServeEngine:
+    def __init__(self, bundle, params, *, slots: int = 4, cache_len: int = 256):
+        self.bundle = bundle
+        self.cfg = bundle.cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.cache = bundle.make_cache(slots, cache_len)
+        self.live: list[Optional[Request]] = [None] * slots
+        self.queue: list[Request] = []
+        self._decode = jax.jit(lambda p, c, t: bundle.decode_step(p, c, t))
+        self._last = np.zeros((slots,), np.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.live[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into_slot(s, req)
+                self.live[s] = req
+
+    def _prefill_into_slot(self, s: int, req: Request):
+        """Single-request prefill, then splice its cache rows into slot s."""
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1 = self.bundle.prefill(self.params, tokens=tokens)
+        first = int(jax.device_get(jnp.argmax(logits[0])))
+        req.tokens.append(first)
+        self._last[s] = first
+        self.cache = _splice(self.cache, cache1, s, self.cache_len)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit + one batched decode tick. Returns #live requests."""
+        self._admit()
+        if not any(r is not None for r in self.live):
+            return 0
+        toks = jnp.asarray(self._last, jnp.int32)[:, None]
+        logits, self.cache = self._decode(self.params, self.cache, toks)
+        nxt = np.asarray(jax.device_get(jnp.argmax(logits, axis=-1)), np.int32)
+        for s, req in enumerate(self.live):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.tokens.append(tok)
+            self._last[s] = tok
+            if req.eos_id is not None and tok == req.eos_id:
+                req.done = True
+            if len(req.tokens) >= req.max_new_tokens:
+                req.done = True
+                req.truncated = req.eos_id is not None and tok != req.eos_id
+            if req.done:
+                self.live[s] = None  # slot freed; stale cache rows are
+                # harmless: admission overwrites them via _splice
+        return sum(r is not None for r in self.live)
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        ticks = 0
+        while (self.queue or any(self.live)) and ticks < max_ticks:
+            before = [r for r in self.live]
+            self.step()
+            for r in before:
+                if r is not None and r.done:
+                    done.append(r)
+            ticks += 1
+        return done
+
+
+def _splice(cache, cache1, slot: int, cache_len: int):
+    """Write request-cache (batch 1, len Lp) rows into slot `slot` of the
+    slab (batch S, len cache_len)."""
+
+    def one(slab, single):
+        if slab.ndim == 1:  # pos / enc_len (B,)
+            return slab.at[slot].set(single[0].astype(slab.dtype))
+        if slab.ndim == single.ndim and slab.shape[0] == single.shape[0]:
+            # per-layer stacked leaves: (L, B, S, ...) vs (L, 1, Lp, ...)
+            if single.ndim >= 3 and slab.ndim >= 3 and single.shape[1] == 1:
+                Lp = single.shape[2]
+                pad = [(0, 0), (0, 0), (0, cache_len - Lp)] + [(0, 0)] * (single.ndim - 3)
+                if single.shape[2] != cache_len and len(slab.shape) >= 3 and slab.shape[2] == cache_len:
+                    single = jnp.pad(single, pad)
+                return jax.lax.dynamic_update_slice_in_dim(slab, single.astype(slab.dtype), slot, axis=1)
+            # state-like leaves (L, B, H, P, N) vs (L, 1, H, P, N)
+            return jax.lax.dynamic_update_slice_in_dim(slab, single.astype(slab.dtype), slot, axis=1)
+        return slab
+
+    return jax.tree.map(one, cache, cache1)

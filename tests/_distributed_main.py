@@ -1,0 +1,145 @@
+"""Multi-device collective checks — run in a subprocess with 8 host devices
+(tests/test_distributed.py drives this; the flag must precede jax import and
+must NOT leak into the main pytest process per the dry-run ground rules).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import ICluster, IProperties, IWorker  # noqa: E402
+from repro.core import comm  # noqa: E402
+from repro.distributed.pipeline import pipeline_apply, reference_apply  # noqa: E402
+from repro.launch.mesh import make_local_mesh, make_pp_mesh  # noqa: E402
+
+
+def check(name, ok):
+    print(f"{name}: {'OK' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit(1)
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+
+    # ---- dataflow over 8 executors ----------------------------------------
+    props = IProperties({"ignis.executor.instances": "8"})
+    w = IWorker(ICluster(props), "python")
+    assert w.executors == 8
+
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 100000, 4096).astype(np.int32)
+    got = [int(x) for x in w.parallelize(vals).sort().collect()]
+    check("psrs_sort_8shards", got == sorted(int(v) for v in vals))
+
+    kv = w.parallelize(vals).map(lambda x: {"key": x % 13, "value": jnp.int32(1)})
+    counts = {int(np.asarray(r["key"])): int(np.asarray(r["value"]))
+              for r in kv.reduce_by_key(lambda a, b: a + b, 0).collect()}
+    exp = {}
+    for v in vals:
+        exp[int(v) % 13] = exp.get(int(v) % 13, 0) + 1
+    check("reduce_by_key_hash_exchange", counts == exp)
+
+    l = w.parallelize(np.arange(64, dtype=np.int32)).map(
+        lambda x: {"key": x % 8, "value": x})
+    r = w.parallelize(np.arange(32, dtype=np.int32)).map(
+        lambda x: {"key": x % 8, "value": x * 2})
+    rows = l.join(r).collect()
+    got_j = sorted((int(np.asarray(x["key"])), int(np.asarray(x["value"][0])),
+                    int(np.asarray(x["value"][1]))) for x in rows)
+    exp_j = sorted((a % 8, a, b * 2) for a in range(64) for b in range(32)
+                   if a % 8 == b % 8)
+    check("distributed_join", got_j == exp_j)
+
+    # ---- comm layer (MPI analogue) -----------------------------------------
+    ctx = w.context
+    x = comm.shard_rows(ctx, jnp.arange(16, dtype=jnp.float32))
+    check("allreduce", float(comm.allreduce(ctx, x)) == float(np.arange(16).sum()))
+    g = comm.gather(ctx, x)
+    check("allgather", np.array_equal(np.asarray(g), np.arange(16, dtype=np.float32)))
+    y = comm.ppermute(ctx, x, shift=1)
+    check("ppermute_ring", np.array_equal(
+        np.asarray(y).reshape(8, 2), np.roll(np.arange(16).reshape(8, 2), 1, axis=0)))
+    a2a = comm.alltoall(ctx, comm.shard_rows(ctx, jnp.arange(64, dtype=jnp.int32)))
+    check("alltoall_shape", np.asarray(a2a).shape == (64,))
+
+    # ---- native HPC apps at p=8 --------------------------------------------
+    from repro.apps.stencil import cg_native, laplacian_matvec_ref
+
+    b = np.random.default_rng(1).normal(size=256).astype(np.float32)
+    xs = cg_native(ctx.mesh, ctx.axis, jnp.asarray(b), 400)
+    res = float(jnp.abs(laplacian_matvec_ref(xs) - jnp.asarray(b)).max())
+    check("cg_8way", res < 5e-2)
+
+    # ---- pipeline parallelism (4 stages × 8 microbatches) -------------------
+    pmesh = make_pp_mesh(4, 1)
+    S, M, mb, d = 4, 8, 2, 16
+    key = jax.random.PRNGKey(0)
+    ws = jax.random.normal(key, (S, d, d)) * 0.3
+    xm = jax.random.normal(key, (M, mb, d))
+
+    def stage_fn(wmat, x):
+        return jnp.tanh(x @ wmat)
+
+    with jax.set_mesh(pmesh):
+        got_pp = pipeline_apply(ws, xm, stage_fn, pmesh)
+    ref_pp = reference_apply(ws, xm, stage_fn)
+    check("pipeline_1f1b", bool(jnp.allclose(got_pp, ref_pp, atol=1e-5)))
+
+    # ---- elastic: save at dp=8, restore at dp=4 ----------------------------
+    import tempfile
+
+    from repro.checkpoint import save
+    from repro.configs import get_config
+    from repro.distributed.elastic import restore_elastic
+    from repro.models import build_model
+
+    cfg = get_config("olmo-1b").reduced()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(1))
+    with tempfile.TemporaryDirectory() as td:
+        mesh8 = make_local_mesh(8, 1)
+        p8 = jax.device_put(params)  # pretend it lived on dp=8
+        save(td, 1, {"params": p8})
+        mesh4 = make_local_mesh(4, 2)
+        out = restore_elastic(td, 1, cfg, mesh4, {"params": params})
+        same = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out["params"]))
+        )
+        check("elastic_reshard_8to4x2", same)
+
+    # ---- shard_map expert-parallel MoE == GSPMD reference ------------------
+    from jax.sharding import NamedSharding, PartitionSpec as P2
+
+    from repro.configs import get_config
+    from repro.models.moe import make_moe_params, moe_ffn_bsd
+    from repro.models.moe_ep import ep_applicable, moe_ffn_bsd_ep
+
+    cfg = get_config("phi3.5-moe-42b-a6.6b").reduced().with_overrides(
+        num_experts=8, experts_per_token=2, d_model=32, d_ff=64, moe_ep=True,
+        capacity_factor=8.0,  # no drops → exact parity
+    )
+    mesh2 = make_local_mesh(8, 1)
+    pmoe = make_moe_params(jax.random.PRNGKey(3), cfg, jnp.float32)
+    xin = jax.random.normal(jax.random.PRNGKey(4), (16, 4, 32))
+    with jax.set_mesh(mesh2):
+        xs2 = jax.device_put(xin, NamedSharding(mesh2, P2("data")))
+        ps2 = jax.device_put(pmoe, NamedSharding(mesh2, P2()))
+
+        def fmoe(x, p):
+            assert ep_applicable(cfg)
+            return moe_ffn_bsd_ep(x, p, cfg)
+
+        y_ep, _aux = jax.jit(fmoe)(xs2, ps2)
+    y_ref, _ = moe_ffn_bsd(xin, pmoe, cfg)
+    check("moe_ep_parity", float(jnp.abs(y_ep - y_ref).max()) < 1e-4)
+
+    print("ALL_DISTRIBUTED_OK")
+
+
+if __name__ == "__main__":
+    main()

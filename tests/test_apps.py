@@ -1,0 +1,59 @@
+"""Paper workloads: SHA-256 vs hashlib, K-Means parity, PageRank/TC vs
+host references, CG convergence."""
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.graph import (
+    make_graph,
+    pagerank,
+    pagerank_reference,
+    tc_reference,
+    transitive_closure,
+)
+from repro.apps.kmeans import kmeans_driver_eval, kmeans_on_device, make_points
+from repro.apps.minebench import make_blocks, merkle_root, mine
+from repro.apps.sha256 import pack_bytes, sha256_bytes_len
+from repro.core import ICluster, IProperties, IWorker
+
+
+def test_sha256_bit_exact():
+    for msg in [b"", b"abc", b"a" * 55, b"ignishpc-jax \xf0\x9f\x9a\x80"[:20]]:
+        buf = np.zeros(64, np.uint8)
+        buf[: len(msg)] = np.frombuffer(msg, np.uint8)
+        d = np.asarray(sha256_bytes_len(jnp.asarray(pack_bytes(buf[None])), len(msg)))[0]
+        got = b"".join(int(x).to_bytes(4, "big") for x in d).hex()
+        assert got == hashlib.sha256(msg).hexdigest()
+
+
+def test_minebench_mining_finds_nonce():
+    blocks = make_blocks(2, 4)
+    root = merkle_root(jnp.asarray(blocks[0]))
+    nonce, found = mine(root, iters=4096, difficulty_bits=4)
+    assert bool(found)  # P(miss) = (1 - 2^-4)^4096 ≈ 0
+
+
+def test_kmeans_fused_equals_driver_eval():
+    pts, _ = make_points(512, 8, 4, 3)
+    init = jnp.asarray(pts[:4])
+    a = kmeans_on_device(jnp.asarray(pts), init, 5)
+    b = kmeans_driver_eval(jnp.asarray(pts), init, 5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_pagerank_matches_reference():
+    w = IWorker(ICluster(IProperties()), "python")
+    edges = make_graph(20, 50, seed=1)
+    pr = pagerank(w, edges, iters=3)
+    ref = pagerank_reference(edges, iters=3)
+    assert max(abs(pr[v] - ref[v]) for v in ref) < 1e-3
+
+
+def test_transitive_closure_matches_reference():
+    w = IWorker(ICluster(IProperties()), "python")
+    edges = make_graph(10, 16, seed=2)
+    tc = transitive_closure(w, edges, max_rounds=8)
+    got = {(int(np.asarray(a)), int(np.asarray(b))) for a, b in tc.collect()}
+    assert got == tc_reference(edges)

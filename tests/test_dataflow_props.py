@@ -1,0 +1,100 @@
+"""Property-based tests (hypothesis): dataflow semantics vs Python oracles."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import ICluster, IProperties, IWorker
+
+_worker = None
+
+
+def worker():
+    global _worker
+    if _worker is None:
+        _worker = IWorker(ICluster(IProperties()), "python")
+    return _worker
+
+
+ints = st.lists(st.integers(0, 2**15 - 1), min_size=1, max_size=60)
+_settings = settings(max_examples=12, deadline=None,
+                     suppress_health_check=list(HealthCheck))
+
+
+@given(ints)
+@_settings
+def test_count_matches(xs):
+    df = worker().parallelize(np.asarray(xs, np.int32))
+    assert df.count() == len(xs)
+
+
+@given(ints, st.integers(1, 7))
+@_settings
+def test_filter_matches(xs, m):
+    df = worker().parallelize(np.asarray(xs, np.int32))
+    got = sorted(int(v) for v in df.filter(lambda x: x % m == 0).collect())
+    assert got == sorted(x for x in xs if x % m == 0)
+
+
+@given(ints)
+@_settings
+def test_sort_matches(xs):
+    df = worker().parallelize(np.asarray(xs, np.int32))
+    assert [int(v) for v in df.sort().collect()] == sorted(xs)
+
+
+@given(ints)
+@_settings
+def test_reduce_sum_matches(xs):
+    df = worker().parallelize(np.asarray(xs, np.int32))
+    assert int(df.reduce(lambda a, b: a + b)) == sum(xs)
+
+
+@given(ints, st.integers(1, 5))
+@_settings
+def test_reduce_by_key_matches(xs, k):
+    df = worker().parallelize(np.asarray(xs, np.int32))
+    kv = df.map(lambda x: {"key": x % k, "value": x})
+    got = {int(np.asarray(r["key"])): int(np.asarray(r["value"]))
+           for r in kv.reduce_by_key(lambda a, b: a + b).collect()}
+    exp = {}
+    for x in xs:
+        exp[x % k] = exp.get(x % k, 0) + x
+    assert got == exp
+
+
+@given(ints)
+@_settings
+def test_distinct_matches(xs):
+    df = worker().parallelize(np.asarray(xs, np.int32))
+    assert sorted(int(v) for v in df.distinct().collect()) == sorted(set(xs))
+
+
+@given(st.lists(st.tuples(st.integers(0, 15), st.integers(0, 100)),
+                min_size=1, max_size=30),
+       st.lists(st.tuples(st.integers(0, 15), st.integers(0, 100)),
+                min_size=1, max_size=30))
+@_settings
+def test_join_matches(ls, rs):
+    w = worker()
+    l = w.parallelize(np.asarray(ls, np.int32)).map(
+        lambda r: {"key": r[0], "value": r[1]})
+    r = w.parallelize(np.asarray(rs, np.int32)).map(
+        lambda r: {"key": r[0], "value": r[1]})
+    rows = l.join(r, max_matches=max(len(rs), 1)).collect()
+    got = sorted((int(np.asarray(x["key"])), int(np.asarray(x["value"][0])),
+                  int(np.asarray(x["value"][1]))) for x in rows)
+    exp = sorted((ka, va, vb) for ka, va in ls for kb, vb in rs if ka == kb)
+    assert got == exp
+
+
+@given(ints, st.integers(1, 4))
+@_settings
+def test_flatmap_matches(xs, f):
+    df = worker().parallelize(np.asarray(xs, np.int32))
+
+    def fn(x):
+        reps = jnp.stack([x + i for i in range(f)])
+        return reps, jnp.ones((f,), bool)
+
+    got = sorted(int(v) for v in df.flatmap(fn, f).collect())
+    assert got == sorted(x + i for x in xs for i in range(f))

@@ -1,0 +1,24 @@
+"""Multi-device collective paths (PSRS over 8 shards, alltoall, comm layer,
+PP schedule, elastic reshard) — executed in a subprocess so the 8-device
+host-platform flag never leaks into this process (dry-run ground rule)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_distributed_suite():
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), env.get("PYTHONPATH", "")]
+    )
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(here, "_distributed_main.py")],
+        env=env, capture_output=True, text=True, timeout=880,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "ALL_DISTRIBUTED_OK" in r.stdout

@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.moe_route import moe_route, moe_route_ref
+from repro.kernels.segment_reduce import segment_reduce, segment_reduce_ref
+from repro.kernels.ssd_scan import ssd_ref, ssd_scan
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("B,H,K,Sq,Skv,hd,causal,window,cap", [
+    (2, 4, 2, 128, 128, 64, True, None, 0.0),
+    (1, 8, 4, 256, 256, 128, True, None, 50.0),
+    (2, 4, 4, 64, 192, 64, True, 64, 0.0),
+    (1, 2, 1, 1, 128, 64, True, None, 0.0),       # decode-style
+    (1, 4, 2, 96, 96, 32, False, None, 0.0),      # bidirectional (encoder)
+])
+def test_flash_attention(B, H, K, Sq, Skv, hd, causal, window, cap):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, Skv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, Skv, hd), jnp.float32)
+    off = (Skv - Sq) if causal else 0
+    o = flash_attention(q, k, v, causal, window, cap, off, 128, 128, True)
+    r = attention_ref(q, k, v, causal=causal, window=window, softcap=cap, q_offset=off)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dtype)
+    o = flash_attention(q, k, v, True, None, 0.0, 0, 64, 64, True)
+    r = attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_grad_matches_ref():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 64, 32))
+    k = jax.random.normal(ks[1], (1, 2, 64, 32))
+    v = jax.random.normal(ks[2], (1, 2, 64, 32))
+    g1 = jax.grad(lambda q: flash_attention(q, k, v, True, None, 0.0, 0, 64, 64, True).sum())(q)
+    g2 = jax.grad(lambda q: attention_ref(q, k, v).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,q", [
+    (2, 128, 4, 16, 1, 32, 32),
+    (1, 256, 8, 64, 1, 128, 64),
+    (2, 64, 4, 16, 2, 16, 16),  # multi-group
+])
+def test_ssd_scan(B, S, H, P, G, N, q):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jax.random.normal(ks[2], (H,)) * 0.5
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    y, st = ssd_scan(x, dt, A_log, Bm, Cm, q, True)
+    yr, sr = ssd_ref(x, dt, A_log, Bm, Cm, q)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("N,D,op,block", [
+    (512, 1, "sum", 128), (300, 4, "sum", 128),
+    (512, 1, "max", 256), (256, 8, "min", 64),
+])
+def test_segment_reduce(N, D, op, block):
+    ks = jax.random.split(KEY, 3)
+    keys = jnp.sort(jax.random.randint(ks[0], (N,), 0, 40))
+    valid = jax.random.bernoulli(ks[1], 0.85, (N,))
+    vals = jax.random.normal(ks[2], (N,) if D == 1 else (N, D))
+    h1, s1 = segment_reduce(keys, valid, vals, op, block, True)
+    h2, s2 = segment_reduce_ref(keys, valid, vals, op)
+    assert bool((h1 == h2).all())
+    mask = np.isfinite(np.asarray(s2))
+    np.testing.assert_allclose(np.asarray(s1)[mask], np.asarray(s2)[mask], atol=1e-4)
+
+
+@pytest.mark.parametrize("T,E,k,C,bt", [
+    (512, 8, 2, 64, 128), (300, 16, 2, 30, 256), (128, 4, 1, 40, 128),
+])
+def test_moe_route(T, E, k, C, bt):
+    logits = jax.random.normal(KEY, (T, E))
+    w1, i1, p1, k1 = moe_route(logits, k, C, bt, True)
+    w2, i2, p2, k2 = moe_route_ref(logits, k, C)
+    assert bool((i1 == i2).all() and (p1 == p2).all() and (k1 == k2).all())
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-5)
+
+
+def test_moe_route_matches_moe_ffn_positions():
+    """Kernel ordinals must agree with models/moe.moe_ffn's argsort path."""
+    from repro.configs import get_config
+    cfg = get_config("mixtral-8x7b").reduced()
+    T, E, k = 64, cfg.num_experts, cfg.experts_per_token
+    x = jax.random.normal(KEY, (T, cfg.d_model))
+    router = jax.random.normal(KEY, (cfg.d_model, E))
+    logits = x @ router
+    C = 16
+    _, idx, pos, keep = moe_route(logits, k, C, 64, True)
+    # recompute via the argsort path used in moe_ffn
+    e_flat = np.asarray(idx).reshape(-1)
+    order = np.argsort(e_flat, kind="stable")
+    counts = np.bincount(e_flat, minlength=E)
+    starts = np.cumsum(counts) - counts
+    pos_ref = np.empty_like(e_flat)
+    pos_ref[order] = np.arange(len(e_flat)) - starts[e_flat[order]]
+    np.testing.assert_array_equal(np.asarray(pos).reshape(-1), pos_ref)

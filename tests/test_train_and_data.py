@@ -1,0 +1,48 @@
+"""Train loop: loss decreases, checkpoint resume continues, data pipeline."""
+import numpy as np
+
+from repro.data.pipeline import (
+    BOS,
+    EOS,
+    byte_tokenize,
+    pack_sequences,
+    batches_from_rows,
+)
+from repro.launch.train import train
+
+
+def test_byte_tokenizer_roundtrip():
+    t = byte_tokenize("hello")
+    assert t.tolist() == list(b"hello")
+
+
+def test_pack_sequences_shapes():
+    docs = [byte_tokenize("aaa"), byte_tokenize("bbbb")]
+    rows = pack_sequences(docs, seq_len=8)
+    assert rows.shape[1] == 9
+    flat = rows.reshape(-1).tolist()
+    assert BOS in flat and EOS in flat
+
+
+def test_batches_cycle():
+    rows = np.arange(40, dtype=np.int32).reshape(8, 5)
+    it = batches_from_rows(rows, batch=4, epochs=2)
+    batches = list(it)
+    assert len(batches) == 4  # 2 per epoch × 2 epochs
+    assert batches[0]["tokens"].shape == (4, 4)
+
+
+def test_train_decreases_loss_and_resumes(tmp_path):
+    _, _, losses = train(arch="ignis-tiny", steps=16, batch=4, seq_len=64,
+                         ckpt_dir=str(tmp_path), ckpt_every=8, log_every=4)
+    assert losses[-1][1] < losses[0][1] + 0.5  # moving in the right direction
+    # resume continues from step 16 (no error, steps advance)
+    _, _, losses2 = train(arch="ignis-tiny", steps=24, batch=4, seq_len=64,
+                          ckpt_dir=str(tmp_path), ckpt_every=8, log_every=4)
+    assert losses2[-1][0] == 24
+
+
+def test_train_with_compression(tmp_path):
+    _, _, losses = train(arch="ignis-tiny", steps=10, batch=4, seq_len=64,
+                         compression="int8", log_every=5)
+    assert np.isfinite(losses[-1][1])
