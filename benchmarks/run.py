@@ -1,5 +1,6 @@
 """Benchmark harness — one entry per paper table/figure.
 
+  §3.5       bench_fusion      stage compilation: fused vs per-op dispatch
   Fig 13/14  bench_minebench   chained maps, ignis vs spark, multi-worker
   Fig 15     bench_terasort    PSRS distributed sort
   Fig 16     bench_kmeans      iterative: fused loop vs driver evaluation
@@ -20,6 +21,7 @@ import time
 from benchmarks.common import emit
 
 BENCHES = [
+    ("fusion", "benchmarks.bench_fusion"),
     ("minebench", "benchmarks.bench_minebench"),
     ("terasort", "benchmarks.bench_terasort"),
     ("kmeans", "benchmarks.bench_kmeans"),

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core.native import ignis_export
 
 
@@ -42,8 +43,7 @@ def stencil_native(mesh, axis, grid, iters: int):
 
         return jax.lax.fori_loop(0, iters, body, u)
 
-    return jax.shard_map(prog, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis),
-                         check_vma=False)(grid)
+    return compat.shard_map(prog, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis))(grid)
 
 
 @ignis_export("stencil_app")
@@ -99,8 +99,7 @@ def cg_native(mesh, axis, b, iters: int):
         x, r, q, rs = jax.lax.fori_loop(0, iters, body, (x, r, q, rs))
         return x
 
-    return jax.shard_map(prog, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis),
-                         check_vma=False)(b)
+    return compat.shard_map(prog, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis))(b)
 
 
 @ignis_export("cg_app")

@@ -16,6 +16,7 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.core import compat
 from repro.core.context import IContext
 from repro.core.dag import DagEngine, TaskNode
 from repro.core.dataframe import IDataFrame
@@ -52,9 +53,7 @@ class ICluster:
             n = min(
                 self.props.get_int("ignis.executor.instances", 1), len(jax.devices())
             )
-            mesh = jax.make_mesh(
-                (max(n, 1),), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-            )
+            mesh = compat.make_mesh((max(n, 1),), ("data",))
         self.mesh = mesh
         self.workers: list[IWorker] = []
 
@@ -89,12 +88,27 @@ class IWorker:
         self.kind = kind
         self.name = name or f"{kind}-{len(cluster.workers)}"
         self.context = IContext(cluster.mesh, "data", cluster.props, self)
-        self.engine = DagEngine()
+        self.engine = DagEngine(
+            fusion=cluster.props.get_bool("ignis.fusion.enabled", True),
+            plan_cache_size=cluster.props.get_int("ignis.fusion.plan.cache.size", 128),
+        )
         self.mode = cluster.props.get("ignis.mode", "ignis")
         self.capacity_factor = cluster.props.get_float("ignis.shuffle.capacity.factor", 2.0)
         self.join_max_matches = cluster.props.get_int("ignis.join.max.matches", 8)
         self._libraries: list[str] = []
         cluster.workers.append(self)
+
+    # ------------------------------------------------------------------
+    # introspection: stage compilation (DESIGN.md §5)
+    # ------------------------------------------------------------------
+    def explain(self, df: IDataFrame) -> str:
+        """Physical plan of a frame's lineage — fused stages + boundaries."""
+        return self.engine.explain(df.node)
+
+    def stage_stats(self) -> dict:
+        """Engine telemetry snapshot: node/block computes, fused stage runs,
+        plan-cache hits/misses/evictions."""
+        return dict(self.engine.stats)
 
     # ------------------------------------------------------------------
     # data ingestion (driver communicator)

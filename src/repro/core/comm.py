@@ -17,12 +17,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core.context import IContext
 
 
 def _smap(ctx: IContext, f, in_specs, out_specs):
-    return jax.shard_map(f, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=False)
+    return compat.shard_map(f, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 def _sharded(ctx):  # leading dim sharded over the context axis

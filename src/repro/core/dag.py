@@ -1,4 +1,5 @@
-"""Lazy task-dependency graph with lineage fault tolerance (paper §3.5, Fig 3).
+"""Lazy task-dependency graph with lineage fault tolerance (paper §3.5, Fig 3)
+and stage compilation (DESIGN.md §5).
 
 Driver calls register TaskNodes; nothing executes until an *action*. A node's
 result is kept only for the duration of one action evaluation unless the user
@@ -6,10 +7,22 @@ result is kept only for the duration of one action evaluation unless the user
 depends only on the parents' block i, so a lost cached block is recomputed
 alone; wide nodes (shuffles) recompute whole-node. Executor/container tasks
 (paper Fig. 3) correspond to the mesh existing — checked at evaluation.
+
+Stage compilation: before an action runs, a planner pass collapses maximal
+chains of fusable narrow nodes into ``FusedStage``s — one composed block
+function, ``jax.jit``-compiled once per (op-chain signature, block avals) and
+reused across blocks and across actions via the engine's compiled-plan cache.
+This is the paper's §3.5 task pipelining (one executor task per stage, not
+per operator) realised as XLA fusion: a map.filter.map chain costs one
+dispatch and zero intermediate materialisations instead of three Python-level
+block_fn calls. Fusion is an *overlay*: the constituent TaskNodes keep their
+``block_fn``s, so lineage repair of a cached stage output still re-derives
+individual blocks by walking the original narrow chain.
 """
 from __future__ import annotations
 
 import itertools
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -26,6 +39,12 @@ class TaskNode:
     block_fn: Optional[Callable] = None
     narrow: bool = False
     cached: bool = False
+    # fusion metadata (DESIGN.md §5): a jit-traceable Block -> Block kernel
+    # equivalent to block_fn for single-parent narrow ops, plus a hashable
+    # signature component. None ⇒ the op is opaque to the planner (wide ops,
+    # spark-mode pipe-wrapped ops, non-traceable partition fns).
+    fuse_fn: Optional[Callable] = None
+    fuse_key: Optional[tuple] = None
     id: int = field(default_factory=lambda: next(_ids))
     # runtime state
     result: Optional[list] = None  # list[Block] when materialised
@@ -38,27 +57,221 @@ class TaskNode:
         return self is other
 
 
-class DagEngine:
-    """Evaluates actions over the task graph with memoisation + lineage."""
+class FusedStage:
+    """A maximal chain of fusable narrow nodes, head → tail.
 
-    def __init__(self):
-        self.stats = {"node_computes": 0, "block_recomputes": 0}
+    Interior nodes are never materialised; the stage's composed kernel maps a
+    parent block straight to the tail's block. The tail keeps normal TaskNode
+    semantics (memoisation, cache(), lineage repair)."""
+
+    __slots__ = ("nodes", "signature")
+
+    def __init__(self, nodes: list[TaskNode]):
+        self.nodes = nodes  # head..tail order
+        self.signature = tuple(n.fuse_key for n in nodes)
+
+    @property
+    def head(self) -> TaskNode:
+        return self.nodes[0]
+
+    @property
+    def tail(self) -> TaskNode:
+        return self.nodes[-1]
+
+    def describe(self) -> str:
+        return " -> ".join(n.op for n in self.nodes)
+
+
+def _block_aval(block) -> tuple:
+    """Hashable shape/dtype summary of a Block — the cache-key half that makes
+    a compiled plan reusable only for compatible block geometry."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(block.data)
+    return (
+        treedef,
+        tuple((l.shape, str(l.dtype)) for l in leaves),
+        block.valid.shape,
+    )
+
+
+class DagEngine:
+    """Evaluates actions over the task graph with memoisation + lineage.
+
+    ``fusion=True`` enables the stage-compilation planner; the compiled-plan
+    cache holds up to ``plan_cache_size`` jitted stage kernels (LRU)."""
+
+    def __init__(self, fusion: bool = True, plan_cache_size: int = 128):
+        self.fusion = fusion
+        self.plan_cache_size = plan_cache_size
+        self._plan_cache: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self.stats = {
+            "node_computes": 0,
+            "block_recomputes": 0,
+            "fused_stages": 0,
+            "fused_ops": 0,
+            "plan_cache_hits": 0,
+            "plan_cache_misses": 0,
+            "plan_cache_evictions": 0,
+        }
+
+    # ---- planner (stage compilation) ----------------------------------------
+    @staticmethod
+    def _fusable(node: TaskNode) -> bool:
+        return (
+            node.narrow
+            and node.fuse_fn is not None
+            and len(node.parents) == 1
+            and node.result is None
+        )
+
+    def _walk(self, root: TaskNode):
+        """Iterative post-order DFS → (order: parents-before-consumers,
+        refs: consumer counts within the reachable graph). Mirrors _eval's
+        short-circuit: the subgraph below a hole-free materialised node will
+        never recompute, so it is not descended into — planning stays O(live
+        graph) on iterative workloads with ever-growing lineage."""
+
+        def expand(n: TaskNode):
+            if n.result is not None and not self._has_holes(n):
+                return iter(())
+            return iter(n.parents)
+
+        refs: dict[TaskNode, int] = {}
+        order: list[TaskNode] = []
+        seen = {root}
+        stack: list[tuple[TaskNode, iter]] = [(root, expand(root))]
+        while stack:
+            node, it = stack[-1]
+            child = next(it, None)
+            if child is None:
+                order.append(node)
+                stack.pop()
+                continue
+            refs[child] = refs.get(child, 0) + 1
+            if child not in seen:
+                seen.add(child)
+                stack.append((child, expand(child)))
+        return order, refs
+
+    def plan(self, root: TaskNode) -> dict[TaskNode, FusedStage]:
+        """Plan the action: map each fused-stage *tail* to its FusedStage.
+
+        A chain grows from a tail down through parents that are fusable, not
+        cached, unmaterialised and single-consumer — every condition marks a
+        node whose blocks someone else needs, i.e. a stage boundary."""
+        if not self.fusion:
+            return {}
+        order, refs = self._walk(root)
+        plans: dict[TaskNode, FusedStage] = {}
+        absorbed: set[TaskNode] = set()
+        for node in reversed(order):  # consumers first ⇒ maximal chains
+            if node in absorbed or not self._fusable(node):
+                continue
+            chain = [node]
+            p = node.parents[0]
+            while (
+                self._fusable(p)
+                and not p.cached
+                and refs.get(p, 0) == 1
+                and p not in absorbed
+            ):
+                chain.append(p)
+                p = p.parents[0]
+            if len(chain) >= 2:
+                chain.reverse()
+                plans[node] = FusedStage(chain)
+                absorbed.update(chain)
+        return plans
+
+    def explain(self, root: TaskNode) -> str:
+        """Render the physical plan — which operators fuse into which stages."""
+        plans = self.plan(root)
+        lines = ["== physical plan =="]
+        emitted: set[int] = set()
+
+        def tags(n: TaskNode) -> str:
+            t = []
+            if not n.narrow:
+                t.append("wide")
+            if n.cached:
+                t.append("cached")
+            if n.result is not None:
+                t.append("materialised")
+            return f" [{', '.join(t)}]" if t else ""
+
+        # iterative DFS — lineage graphs routinely exceed recursion depth
+        stack: list[tuple[TaskNode, int]] = [(root, 0)]
+        while stack:
+            node, depth = stack.pop()
+            if node.id in emitted:
+                lines.append("  " * depth + f"({node.op}#{node.id} — shared, see above)")
+                continue
+            emitted.add(node.id)
+            stage = plans.get(node)
+            if stage is not None:
+                lines.append(
+                    "  " * depth
+                    + f"FusedStage[{stage.describe()}]  ({len(stage.nodes)} ops, "
+                    f"1 jit dispatch/block){' [cached]' if node.cached else ''}"
+                )
+                parents = stage.head.parents
+            else:
+                lines.append("  " * depth + f"{node.op}#{node.id}{tags(node)}")
+                parents = node.parents
+            stack.extend((p, depth + 1) for p in reversed(parents))
+        return "\n".join(lines)
+
+    # ---- compiled-plan cache -------------------------------------------------
+    def _compiled(self, stage: FusedStage, block) -> Callable:
+        """Jitted composed kernel for this stage specialised to the block's
+        avals — fetched from (or inserted into) the LRU plan cache."""
+        import jax
+
+        key = (stage.signature, _block_aval(block))
+        fn = self._plan_cache.get(key)
+        if fn is not None:
+            self._plan_cache.move_to_end(key)
+            self.stats["plan_cache_hits"] += 1
+            return fn
+        self.stats["plan_cache_misses"] += 1
+        kernels = [n.fuse_fn for n in stage.nodes]
+
+        def composed(data, valid):
+            from repro.core.partition import Block
+
+            b = Block(data, valid)
+            for k in kernels:
+                b = k(b)
+            return b.data, b.valid
+
+        fn = jax.jit(composed)
+        self._plan_cache[key] = fn
+        while len(self._plan_cache) > self.plan_cache_size:
+            self._plan_cache.popitem(last=False)
+            self.stats["plan_cache_evictions"] += 1
+        return fn
 
     # ---- evaluation ---------------------------------------------------------
     def evaluate(self, node: TaskNode, memo: dict | None = None):
         memo = {} if memo is None else memo
-        return self._eval(node, memo)
+        return self._eval(node, memo, self.plan(node))
 
-    def _eval(self, node: TaskNode, memo: dict):
+    def _eval(self, node: TaskNode, memo: dict, plans: dict | None = None):
+        plans = {} if plans is None else plans
         if node.result is not None and not self._has_holes(node):
             return node.result
         if node in memo:
             return memo[node]
         if node.result is not None and self._has_holes(node):
-            blocks = self._repair(node, memo)
+            blocks = self._repair(node, memo, plans)
         else:
-            parent_results = [self._eval(p, memo) for p in node.parents]
-            blocks = self._compute(node, parent_results)
+            stage = plans.get(node)
+            if stage is not None:
+                blocks = self._compute_stage(stage, memo, plans)
+            else:
+                parent_results = [self._eval(p, memo, plans) for p in node.parents]
+                blocks = self._compute(node, parent_results)
         memo[node] = blocks
         if node.cached:
             node.result = blocks
@@ -74,39 +287,59 @@ class DagEngine:
             ]
         return node.fn(parent_results)
 
+    def _compute_stage(self, stage: FusedStage, memo: dict, plans: dict):
+        """Run a fused stage: one compiled kernel per block, head's parent to
+        tail, no interior materialisation."""
+        from repro.core.partition import Block
+
+        parent_blocks = self._eval(stage.head.parents[0], memo, plans)
+        out = []
+        for b in parent_blocks:
+            fn = self._compiled(stage, b)
+            data, valid = fn(b.data, b.valid)
+            out.append(Block(data, valid))
+        for n in stage.nodes:  # telemetry parity with the unfused path
+            n.compute_count += 1
+        self.stats["node_computes"] += len(stage.nodes)
+        self.stats["fused_stages"] += 1
+        self.stats["fused_ops"] += len(stage.nodes)
+        return out
+
     # ---- lineage repair ------------------------------------------------------
     @staticmethod
     def _has_holes(node: TaskNode) -> bool:
         return node.result is not None and any(b is None for b in node.result)
 
-    def _repair(self, node: TaskNode, memo: dict):
+    def _repair(self, node: TaskNode, memo: dict, plans: dict | None = None):
         """Recompute only the missing blocks of a cached node (narrow lineage);
-        wide nodes fall back to full recompute."""
+        wide nodes fall back to full recompute. A fused-stage tail repairs by
+        walking its constituent ops' block_fns — fusion never loses lineage."""
+        plans = {} if plans is None else plans
         if not node.narrow or node.block_fn is None:
             node.result = None
-            parent_results = [self._eval(p, memo) for p in node.parents]
+            parent_results = [self._eval(p, memo, plans) for p in node.parents]
             return self._compute(node, parent_results)
         blocks = list(node.result)
         for i, b in enumerate(blocks):
             if b is None:
-                parents_i = [self._parent_block(p, i, memo) for p in node.parents]
+                parents_i = [self._parent_block(p, i, memo, plans) for p in node.parents]
                 blocks[i] = node.block_fn(parents_i)
                 self.stats["block_recomputes"] += 1
         node.result = blocks
         return blocks
 
-    def _parent_block(self, parent: TaskNode, i: int, memo: dict):
+    def _parent_block(self, parent: TaskNode, i: int, memo: dict, plans: dict | None = None):
         if parent.result is not None and parent.result[i] is not None:
             return parent.result[i]
         if parent.narrow and parent.block_fn is not None and parent.parents:
             blk = parent.block_fn(
-                [self._parent_block(gp, i, memo) for gp in parent.parents]
+                [self._parent_block(gp, i, memo, plans) for gp in parent.parents]
             )
             self.stats["block_recomputes"] += 1
             if parent.cached and parent.result is not None:
                 parent.result[i] = blk
             return blk
-        return self._eval(parent, memo)[i]
+        return self._eval(parent, memo, plans)[i]
 
     # ---- failure injection (tests / chaos) -----------------------------------
     @staticmethod

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compat
 from repro.core import executor as ex
 from repro.core import shuffle as sh
 from repro.core.dag import TaskNode
@@ -54,10 +55,24 @@ class IDataFrame:
     def _engine(self):
         return self.worker.engine
 
-    def _narrow(self, op: str, block_fn) -> "IDataFrame":
+    def _narrow(self, op: str, kernel, key: tuple = (), fusable: bool = True) -> "IDataFrame":
+        """Register a narrow op from a Block → Block kernel.
+
+        The kernel doubles as the node's ``block_fn`` (unfused / repair path)
+        and, when ``fusable``, as its ``fuse_fn`` — the planner composes
+        consecutive fuse_fns into one jitted stage (DESIGN.md §5). ``key``
+        extends the op name into the plan-cache signature. In spark mode every
+        op pays the driver pipe, so nothing can fuse across it."""
+        def block_fn(ps, _k=kernel):
+            return _k(ps[0])
+
+        fuse_fn = kernel if fusable else None
+        fuse_key = (op, *key) if fuse_fn is not None else None
         if self.worker.mode == "spark":
             block_fn = self.worker._pipe_wrap(block_fn)
-        node = TaskNode(op, [self.node], block_fn=block_fn, narrow=True)
+            fuse_fn = fuse_key = None
+        node = TaskNode(op, [self.node], block_fn=block_fn, narrow=True,
+                        fuse_fn=fuse_fn, fuse_key=fuse_key)
         return IDataFrame(self.worker, node)
 
     def _wide(self, op: str, fn, extra_parents=()) -> "IDataFrame":
@@ -77,36 +92,42 @@ class IDataFrame:
     # ------------------------------------------------------------------
     def map(self, fn) -> "IDataFrame":
         fn = resolve(fn)
-        return self._narrow("map", lambda ps: ex.map_block(ps[0], fn))
+        return self._narrow("map", ex.map_kernel(fn), key=(fn,))
 
     def filter(self, fn) -> "IDataFrame":
         fn = resolve(fn)
-        return self._narrow("filter", lambda ps: ex.filter_block(ps[0], fn))
+        return self._narrow("filter", ex.filter_kernel(fn), key=(fn,))
 
     def flatmap(self, fn, fanout: int) -> "IDataFrame":
         fn = resolve(fn)
-        return self._narrow("flatmap", lambda ps: ex.flatmap_block(ps[0], fn, fanout))
+        return self._narrow("flatmap", ex.flatmap_kernel(fn, fanout), key=(fn, fanout))
 
     def map_partitions(self, fn) -> "IDataFrame":
+        # fn sees raw block data and may do host-side work → opaque to fusion
         fn = resolve(fn)
-        return self._narrow("mapPartitions", lambda ps: ex.map_partitions_block(ps[0], fn))
+        return self._narrow(
+            "mapPartitions",
+            lambda b: ex.map_partitions_block(b, fn),
+            fusable=False,
+        )
 
     def key_by(self, fn) -> "IDataFrame":
         fn = resolve(fn)
-        return self._narrow("keyBy", lambda ps: ex.key_by_block(ps[0], fn))
+        return self._narrow("keyBy", ex.key_by_kernel(fn), key=(fn,))
 
     def map_values(self, fn) -> "IDataFrame":
         fn = resolve(fn)
-        return self._narrow("mapValues", lambda ps: ex.map_values_block(ps[0], fn))
+        return self._narrow("mapValues", ex.map_values_kernel(fn), key=(fn,))
 
     def keys(self) -> "IDataFrame":
-        return self._narrow("keys", lambda ps: ex.keys_block(ps[0]))
+        return self._narrow("keys", ex.keys_block)
 
     def values(self) -> "IDataFrame":
-        return self._narrow("values", lambda ps: ex.values_block(ps[0]))
+        return self._narrow("values", ex.values_block)
 
     def sample(self, fraction: float, seed: int = 0) -> "IDataFrame":
-        return self._narrow("sample", lambda ps: ex.sample_block(ps[0], fraction, seed))
+        return self._narrow("sample", ex.sample_kernel(fraction, seed),
+                            key=(fraction, seed))
 
     def sample_by_key(self, fractions: dict, seed: int = 0) -> "IDataFrame":
         """Stratified sampling on a KV frame: per-key keep fractions."""
@@ -114,8 +135,7 @@ class IDataFrame:
         keys_arr = jnp.asarray([k for k, _ in items], jnp.int32)
         frac_arr = jnp.asarray([v for _, v in items], jnp.float32)
 
-        def block_fn(ps):
-            b = ps[0]
+        def kernel(b):
             k = b.data["key"].astype(jnp.int32)
             idx = jnp.searchsorted(keys_arr, k)
             idxc = jnp.clip(idx, 0, keys_arr.shape[0] - 1)
@@ -123,7 +143,7 @@ class IDataFrame:
             u = jax.random.uniform(jax.random.PRNGKey(seed + b.capacity), (b.capacity,))
             return Block(b.data, b.valid & (u < f))
 
-        return self._narrow("sampleByKey", block_fn)
+        return self._narrow("sampleByKey", kernel, key=(tuple(items), seed))
 
     def take_sample(self, n: int, seed: int = 0) -> list:
         """Action: uniform sample of n valid rows (without replacement)."""
@@ -200,12 +220,11 @@ class IDataFrame:
                         rows, ok, ovf = sh.local_join(a, b, c, d, e, g, m)
                         return rows, ok, jax.lax.psum(ovf, ctx.axis)
 
-                    f = jax.shard_map(
+                    f = compat.shard_map(
                         _local,
                         mesh=ctx.mesh,
                         in_specs=(P(ctx.axis),) * 6,
                         out_specs=(P(ctx.axis), P(ctx.axis), P()),
-                        check_vma=False,
                     )
                     rows, ok, ovf = f(lk, lv, ld, rk, rv, rd)
                 if int(jax.device_get(jnp.sum(ovf))) == 0:
@@ -354,6 +373,11 @@ class IDataFrame:
         return self
 
     uncache = unpersist
+
+    def explain(self) -> str:
+        """Physical plan for this frame's lineage: which narrow ops the
+        planner fuses into single-dispatch stages (DESIGN.md §5)."""
+        return self._engine.explain(self.node)
 
     # ------------------------------------------------------------------
     # actions

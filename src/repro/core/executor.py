@@ -99,6 +99,39 @@ def sample_block(b: Block, frac: float, seed: int) -> Block:
 
 
 # ---------------------------------------------------------------------------
+# fusable kernels: Block → Block closures over one narrow op — the unit the
+# DAG planner composes into FusedStages (DESIGN.md §5). Each is jit-safe:
+# fixed shapes in → fixed shapes out, no host callbacks, so a chain of them
+# traces into a single XLA computation. mapPartitions is deliberately absent —
+# its user fn takes raw block data and may do host-side work.
+# ---------------------------------------------------------------------------
+
+
+def map_kernel(fn: Callable) -> Callable:
+    return lambda b: map_block(b, fn)
+
+
+def filter_kernel(pred: Callable) -> Callable:
+    return lambda b: filter_block(b, pred)
+
+
+def flatmap_kernel(fn: Callable, fanout: int) -> Callable:
+    return lambda b: flatmap_block(b, fn, fanout)
+
+
+def key_by_kernel(fn: Callable) -> Callable:
+    return lambda b: key_by_block(b, fn)
+
+
+def map_values_kernel(fn: Callable) -> Callable:
+    return lambda b: map_values_block(b, fn)
+
+
+def sample_kernel(frac: float, seed: int) -> Callable:
+    return lambda b: sample_block(b, frac, seed)
+
+
+# ---------------------------------------------------------------------------
 # reductions (log-depth pairwise fold — TPU-friendly, general binary fn)
 # ---------------------------------------------------------------------------
 

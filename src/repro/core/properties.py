@@ -21,6 +21,8 @@ DEFAULTS = {
     "ignis.join.max.matches": "8",
     "ignis.transport.compression": "0",
     "ignis.fault.max.retries": "2",
+    "ignis.fusion.enabled": "true",  # stage compilation (DESIGN.md §5)
+    "ignis.fusion.plan.cache.size": "128",  # compiled-plan LRU entries
 }
 
 
@@ -47,6 +49,12 @@ class IProperties:
             return int(self._kv.get(k, default))
         except ValueError:
             return default
+
+    def get_bool(self, k, default=False):
+        v = self._kv.get(k)
+        if v is None:
+            return default
+        return str(v).strip().lower() in ("1", "true", "yes", "on")
 
     def get_float(self, k, default=0.0):
         try:

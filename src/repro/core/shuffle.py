@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core.context import IContext
 from repro.core.partition import Block
 
@@ -126,12 +127,11 @@ def psrs_sort(ctx: IContext, keys, valid, data, capacity_factor=2.0):
         res = jax.tree.map(lambda x: x[order2], out)
         return res["k"], res["valid"], res["data"], jax.lax.psum(overflow, ctx.axis)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         f,
         mesh=ctx.mesh,
         in_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis)),
         out_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis), P()),
-        check_vma=False,
     )
     return fn(keys, valid, data)
 
@@ -167,12 +167,11 @@ def hash_exchange(ctx: IContext, keys, valid, data, capacity_factor=2.0):
         out, overflow = _pack_exchange(dest, payload, ctx.axis, p, C)
         return out["k"], out["valid"], out["data"], jax.lax.psum(overflow, ctx.axis)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         f,
         mesh=ctx.mesh,
         in_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis)),
         out_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis), P()),
-        check_vma=False,
     )
     return fn(keys, valid, data)
 

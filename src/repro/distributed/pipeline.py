@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
+
 
 def pipeline_apply(stage_params, x_micro, stage_fn, mesh, axis: str = "stage"):
     """stage_params: pytree with leading dim S (stages), sharded P(axis).
@@ -58,12 +60,11 @@ def pipeline_apply(stage_params, x_micro, stage_fn, mesh, axis: str = "stage"):
         mine = jnp.where(sid == S - 1, outs, jnp.zeros_like(outs))
         return jax.lax.psum(mine, axis)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         per_stage,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(stage_params, x_micro)
 

@@ -47,6 +47,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
              dump_hlo: str | None = None) -> dict:
     import jax
 
+    from repro.core import compat
     from repro.configs import SHAPES, get_config
     from repro.distributed.sharding import (
         cache_specs,
@@ -106,7 +107,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
         )
         donate = (1,)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate).lower(*args)
         rec["lower_s"] = round(time.time() - t0, 1)
         t1 = time.time()

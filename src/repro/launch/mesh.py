@@ -5,26 +5,21 @@ jax device state (device count is locked on first jax init).
 """
 from __future__ import annotations
 
-import jax
-
-
-def _mk(shape, axes):
-    kinds = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=kinds)
+from repro.core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; multi-pod adds a leading 2-pod DCN axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mk(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
-    return _mk((data, model), ("data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def make_pp_mesh(stages: int, data: int = 1):
     """Pipeline-parallel mesh (stage axis first) for distributed/pipeline.py."""
-    return _mk((stages, data), ("stage", "data"))
+    return make_mesh((stages, data), ("stage", "data"))

@@ -24,11 +24,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.models.moe import route
 
 
 def _mesh_axis_size(axis: str):
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_ambient_mesh()
     if mesh is None or axis not in (mesh.axis_names or ()):
         return None
     return mesh.shape[axis]
@@ -109,7 +110,7 @@ def moe_ffn_bsd_ep(x, params, cfg, axis: str = "data"):
         aux = E * jnp.sum(f * Pm)
         return y.reshape(xb.shape), jax.lax.pmean(aux, axis)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local,
         in_specs=(
             P(axis, None, None),  # x batch-sharded (S gathered if SP outside)
@@ -119,6 +120,5 @@ def moe_ffn_bsd_ep(x, params, cfg, axis: str = "data"):
             P(axis, "model", None),
         ),
         out_specs=(P(axis, None, None), P()),
-        check_vma=False,
     )
     return fn(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])

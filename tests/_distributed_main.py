@@ -12,6 +12,7 @@ import numpy as np  # noqa: E402
 
 from repro.core import ICluster, IProperties, IWorker  # noqa: E402
 from repro.core import comm  # noqa: E402
+from repro.core import compat  # noqa: E402
 from repro.distributed.pipeline import pipeline_apply, reference_apply  # noqa: E402
 from repro.launch.mesh import make_local_mesh, make_pp_mesh  # noqa: E402
 
@@ -84,7 +85,7 @@ def main():
     def stage_fn(wmat, x):
         return jnp.tanh(x @ wmat)
 
-    with jax.set_mesh(pmesh):
+    with compat.set_mesh(pmesh):
         got_pp = pipeline_apply(ws, xm, stage_fn, pmesh)
     ref_pp = reference_apply(ws, xm, stage_fn)
     check("pipeline_1f1b", bool(jnp.allclose(got_pp, ref_pp, atol=1e-5)))
@@ -126,7 +127,7 @@ def main():
     mesh2 = make_local_mesh(8, 1)
     pmoe = make_moe_params(jax.random.PRNGKey(3), cfg, jnp.float32)
     xin = jax.random.normal(jax.random.PRNGKey(4), (16, 4, 32))
-    with jax.set_mesh(mesh2):
+    with compat.set_mesh(mesh2):
         xs2 = jax.device_put(xin, NamedSharding(mesh2, P2("data")))
         ps2 = jax.device_put(pmoe, NamedSharding(mesh2, P2()))
 

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis): dataflow semantics vs Python oracles."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency (requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import ICluster, IProperties, IWorker

@@ -1,0 +1,227 @@
+"""Stage compilation (DESIGN.md §5): planner boundaries, the compiled-plan
+cache, and lineage repair through fused stages."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ICluster, IProperties, IWorker
+from repro.core.dag import DagEngine
+
+
+@pytest.fixture
+def worker():
+    return IWorker(ICluster(IProperties()), "python")
+
+
+def _chain(df):
+    return (
+        df.map(lambda x: x * 2)
+        .filter(lambda x: x % 3 == 0)
+        .map(lambda x: x + 1)
+    )
+
+
+# ---------------------------------------------------------------------------
+# planner shape
+# ---------------------------------------------------------------------------
+
+
+def test_maximal_chain_fuses(worker):
+    df = _chain(worker.parallelize(np.arange(30, dtype=np.int32)))
+    plans = worker.engine.plan(df.node)
+    assert df.node in plans
+    stage = plans[df.node]
+    assert [n.op for n in stage.nodes] == ["map", "filter", "map"]
+
+
+def test_single_op_does_not_fuse(worker):
+    df = worker.parallelize(np.arange(10, dtype=np.int32)).map(lambda x: x + 1)
+    assert worker.engine.plan(df.node) == {}
+
+
+def test_cached_node_is_a_stage_boundary(worker):
+    df = worker.parallelize(np.arange(30, dtype=np.int32))
+    mid = df.map(lambda x: x * 2).filter(lambda x: x % 3 == 0).cache()
+    tail = mid.map(lambda x: x + 1).map(lambda x: x - 5)
+    plans = worker.engine.plan(tail.node)
+    # chain below the cached node and chain above it are separate stages
+    assert [n.op for n in plans[tail.node].nodes] == ["map", "map"]
+    assert [n.op for n in plans[mid.node].nodes] == ["map", "filter"]
+    # the cached boundary really materialises
+    tail.count()
+    assert mid.node.result is not None
+
+
+def test_wide_op_is_a_stage_boundary(worker):
+    df = worker.parallelize(np.arange(30, dtype=np.int32))
+    tail = (
+        df.map(lambda x: x % 7)
+        .distinct()
+        .map(lambda x: x + 1)
+        .map(lambda x: x * 3)
+    )
+    plans = worker.engine.plan(tail.node)
+    assert [n.op for n in plans[tail.node].nodes] == ["map", "map"]
+    # the map below distinct has nothing narrow to pair with → unfused
+    assert len(plans) == 1
+
+
+def test_shared_node_is_a_stage_boundary(worker):
+    df = worker.parallelize(np.arange(20, dtype=np.int32))
+    a = df.map(lambda x: x + 1).map(lambda x: x * 2)
+    b = a.map(lambda x: x - 1)
+    c = a.map(lambda x: x + 10)
+    u = b.union(c)
+    plans = worker.engine.plan(u.node)
+    # a's tail has two consumers: neither b nor c may absorb it
+    assert [n.op for n in plans[a.node].nodes] == ["map", "map"]
+    assert b.node not in plans and c.node not in plans  # single ops
+    rows = sorted(int(x) for x in u.collect())
+    exp = sorted(
+        [2 * (x + 1) - 1 for x in range(20)] + [2 * (x + 1) + 10 for x in range(20)]
+    )
+    assert rows == exp
+
+
+def test_spark_mode_pipe_disables_fusion():
+    ws = IWorker(ICluster(IProperties({"ignis.mode": "spark"})), "python")
+    df = _chain(ws.parallelize(np.arange(30, dtype=np.int32)))
+    assert ws.engine.plan(df.node) == {}
+    got = sorted(int(x) for x in df.collect())
+    assert got == sorted(2 * x + 1 for x in range(30) if (2 * x) % 3 == 0)
+
+
+def test_map_partitions_is_opaque_to_fusion(worker):
+    df = (
+        worker.parallelize(np.arange(12, dtype=np.int32))
+        .map(lambda x: x + 1)
+        .map_partitions(lambda d: d * 2)
+        .map(lambda x: x - 1)
+    )
+    plans = worker.engine.plan(df.node)
+    assert plans == {}  # both maps are length-1 chains around the opaque op
+    got = sorted(int(x) for x in df.collect())
+    assert got == sorted(2 * (x + 1) - 1 for x in range(12))
+
+
+def test_fusion_disabled_by_property():
+    w = IWorker(ICluster(IProperties({"ignis.fusion.enabled": "false"})), "python")
+    df = _chain(w.parallelize(np.arange(30, dtype=np.int32)))
+    assert w.engine.plan(df.node) == {}
+    df.count()
+    assert w.engine.stats["fused_stages"] == 0
+
+
+# ---------------------------------------------------------------------------
+# correctness: fused == unfused
+# ---------------------------------------------------------------------------
+
+
+def test_fused_matches_unfused_results():
+    wf = IWorker(ICluster(IProperties()), "python")
+    wu = IWorker(ICluster(IProperties({"ignis.fusion.enabled": "false"})), "python")
+    data = np.arange(100, dtype=np.int32)
+    outs = []
+    for w in (wf, wu):
+        kv = (
+            w.parallelize(data, blocks=4)
+            .map(lambda x: x * 3)
+            .filter(lambda x: x % 2 == 0)
+            .map(lambda x: {"key": x % 5, "value": x})
+            .map_values(lambda v: v + 1)
+        )
+        outs.append(
+            sorted(
+                (int(np.asarray(r["key"])), int(np.asarray(r["value"])))
+                for r in kv.collect()
+            )
+        )
+    assert outs[0] == outs[1]
+    assert wf.engine.stats["fused_stages"] > 0
+    assert wu.engine.stats["fused_stages"] == 0
+
+
+def test_flatmap_and_sample_fuse(worker):
+    df = worker.parallelize(np.arange(16, dtype=np.int32))
+
+    def fan(x):
+        return jnp.stack([x, x + 100]), jnp.ones((2,), bool)
+
+    out = df.map(lambda x: x + 1).flatmap(fan, 2).filter(lambda x: x % 2 == 0)
+    plans = worker.engine.plan(out.node)
+    assert [n.op for n in plans[out.node].nodes] == ["map", "flatmap", "filter"]
+    got = sorted(int(x) for x in out.collect())
+    exp = sorted(
+        v for x in range(16) for v in (x + 1, x + 101) if v % 2 == 0
+    )
+    assert got == exp
+
+
+# ---------------------------------------------------------------------------
+# compiled-plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hits_across_blocks_and_actions(worker):
+    df = _chain(worker.parallelize(np.arange(40, dtype=np.int32), blocks=4))
+    df.count()
+    s1 = worker.stage_stats()
+    assert s1["plan_cache_misses"] == 1  # one compile for 4 same-shape blocks
+    assert s1["plan_cache_hits"] == 3
+    df.count()  # second action over the same lineage
+    s2 = worker.stage_stats()
+    assert s2["plan_cache_misses"] == 1  # no recompile
+    assert s2["plan_cache_hits"] == 7
+
+
+def test_plan_cache_eviction():
+    w = IWorker(
+        ICluster(IProperties({"ignis.fusion.plan.cache.size": "1"})), "python"
+    )
+    a = _chain(w.parallelize(np.arange(8, dtype=np.int32)))
+    b = _chain(w.parallelize(np.arange(8, dtype=np.int32)).map(lambda x: x))
+    a.count()
+    b.count()
+    assert w.engine.stats["plan_cache_evictions"] >= 1
+    assert len(w.engine._plan_cache) == 1
+
+
+def test_explain_mentions_fused_stage(worker):
+    df = _chain(worker.parallelize(np.arange(10, dtype=np.int32)))
+    plan = df.explain()
+    assert "FusedStage[map -> filter -> map]" in plan
+    assert "parallelize" in plan
+    assert worker.explain(df) == plan
+
+
+# ---------------------------------------------------------------------------
+# lineage repair through a fused stage
+# ---------------------------------------------------------------------------
+
+
+def test_kill_block_recomputes_only_lost_block_through_fused_stage(worker):
+    df = worker.parallelize(np.arange(40, dtype=np.int32), blocks=4)
+    tail = _chain(df).persist()
+    assert tail.count() == sum(1 for x in range(40) if (2 * x) % 3 == 0)
+    base = worker.engine.stats["block_recomputes"]
+    DagEngine.kill_block(tail.node, 2)
+    assert tail.count() == sum(1 for x in range(40) if (2 * x) % 3 == 0)
+    # repair walks the 3-op chain for block 2 only: interior recomputes are
+    # per-op but confined to the lost block
+    recomputes = worker.engine.stats["block_recomputes"] - base
+    assert 1 <= recomputes <= 3
+    got = sorted(int(x) for x in tail.collect())
+    assert got == sorted(2 * x + 1 for x in range(40) if (2 * x) % 3 == 0)
+
+
+def test_kill_block_with_cached_ancestor_inside_lineage(worker):
+    df = worker.parallelize(np.arange(40, dtype=np.int32), blocks=4)
+    m1 = df.map(lambda x: x + 1).persist()
+    tail = m1.map(lambda x: x * 2).map(lambda x: x - 1).persist()
+    assert tail.count() == 40
+    c1 = m1.node.compute_count
+    base = worker.engine.stats["block_recomputes"]
+    DagEngine.kill_block(tail.node, 1)
+    assert tail.count() == 40
+    assert m1.node.compute_count == c1  # cached ancestor untouched
+    assert worker.engine.stats["block_recomputes"] - base == 2  # 2 fused ops, 1 block

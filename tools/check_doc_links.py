@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Docs link check: fail if a source file cites a ``*.md`` document that
+does not exist in the repo.
+
+Source files reference design docs by name (``DESIGN.md §2``,
+``EXPERIMENTS.md §Perf``); for a while several of those documents did not
+exist. This check keeps citations honest — runs in CI after the tests.
+
+Usage: python tools/check_doc_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# markdown-document tokens, optionally with a relative path prefix
+_MD_REF = re.compile(r"\b([A-Za-z0-9_\-./]+\.md)\b")
+_SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+
+
+def cited_docs(root: Path):
+    """Yield (source_file, lineno, doc_name) for every *.md citation."""
+    for d in _SCAN_DIRS:
+        for py in sorted((root / d).rglob("*.py")):
+            for lineno, line in enumerate(py.read_text(encoding="utf-8").splitlines(), 1):
+                for m in _MD_REF.finditer(line):
+                    yield py, lineno, m.group(1)
+
+
+def resolve(root: Path, src: Path, name: str) -> bool:
+    """A citation resolves if the doc exists at the repo root, under docs/,
+    or relative to the citing file."""
+    candidates = [root / name, root / "docs" / Path(name).name, src.parent / name]
+    return any(c.is_file() for c in candidates)
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parents[1]
+    missing = []
+    checked = 0
+    for src, lineno, name in cited_docs(root):
+        checked += 1
+        if not resolve(root, src, name):
+            missing.append(f"{src.relative_to(root)}:{lineno}: cites missing doc {name!r}")
+    if missing:
+        print("Broken doc citations:")
+        print("\n".join(f"  {m}" for m in missing))
+        return 1
+    print(f"doc link check OK ({checked} citations resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
