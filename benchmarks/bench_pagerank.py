@@ -1,5 +1,10 @@
 """PageRank (paper Fig. 17): join/reduceByKey graph pattern on the dataflow
-layer, ignis vs spark mode, validated against the host reference."""
+layer, ignis vs spark mode, validated against the host reference.
+
+The iterative join/reduceByKey loop re-builds its lineage every iteration —
+exactly the workload the shuffle capacity memory (DESIGN.md §6) targets —
+so the derived column reports overflow retries, wide-stage recompiles and
+capacity-memory hits alongside throughput."""
 from __future__ import annotations
 
 import numpy as np
@@ -20,8 +25,20 @@ def bench(n_vertices: int = 48, n_edges: int = 160, iters: int = 3):
         err = max(abs(pr[v] - ref[v]) for v in ref)
         assert err < 1e-3, err
         t = timeit(lambda: pagerank(w, edges, iters), warmup=0, iters=2)
+        st = w.shuffle_stats()
         res[mode] = t
-        rows.append(row(f"pagerank_{mode}", t, f"edges*iters/s={n_edges*iters/t:.0f}"))
+        rows.append(row(
+            f"pagerank_{mode}", t,
+            f"edges*iters/s={n_edges*iters/t:.0f} "
+            f"retries={st['overflow_retries']} "
+            f"recompiles={st['wide_plan_misses']} "
+            f"mem_hits={st['capacity_memory_hits']}"))
     rows.append(row("pagerank_speedup", 0.0,
                     f"ignis_vs_spark={res['spark']/res['ignis']:.2f}x"))
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(bench())

@@ -1,5 +1,11 @@
 """TeraSort (paper Fig. 15): PSRS distributed sort throughput, ignis vs
-spark mode (host pipe on the pre-sort map)."""
+spark mode (host pipe on the pre-sort map).
+
+Also reports the adaptive shuffle engine's telemetry (DESIGN.md §6): the
+timing loop re-builds the pipeline every iteration, so overflow retries,
+wide-stage recompiles and capacity-memory hits show whether repeated sorts
+ran capacity-warm (they should: retries=0 after the first action, memory
+hits growing, compiles flat)."""
 from __future__ import annotations
 
 import numpy as np
@@ -20,8 +26,19 @@ def bench(n: int = 200_000):
     for mode in ("ignis", "spark"):
         w = IWorker(ICluster(IProperties({"ignis.mode": mode})), "python")
         t = timeit(lambda: _sort(w, keys), warmup=1, iters=3)
+        st = w.shuffle_stats()
         res[mode] = t
-        rows.append(row(f"terasort_{mode}", t, f"Mkeys/s={n/t/1e6:.2f}"))
+        rows.append(row(
+            f"terasort_{mode}", t,
+            f"Mkeys/s={n/t/1e6:.2f} retries={st['overflow_retries']} "
+            f"recompiles={st['wide_plan_misses']} "
+            f"mem_hits={st['capacity_memory_hits']}"))
     rows.append(row("terasort_speedup", 0.0,
                     f"ignis_vs_spark={res['spark']/res['ignis']:.2f}x"))
     return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(bench())

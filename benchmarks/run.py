@@ -10,15 +10,29 @@
   Table 5    bench_sloc        integration SLOC
   (ours)     roofline          §Roofline summary from the dry-run artifacts
 
-Prints ``name,us_per_call,derived`` CSV. ``--only <name>`` to subset.
+Prints ``name,us_per_call,derived`` CSV. ``--only <name>`` to subset;
+``--smoke`` shrinks problem sizes for CI; ``--json PATH`` additionally
+writes the rows as a JSON artifact (one record per row) so the per-PR perf
+trajectory is machine-readable.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 from benchmarks.common import emit
+
+# reduced problem sizes for the CI perf-smoke job (fast, still exercises the
+# shuffle/fusion paths end to end)
+SMOKE_KWARGS = {
+    "fusion": {"n": 1 << 12, "blocks": 4, "iters": 3},
+    "terasort": {"n": 20_000},
+    "pagerank": {"n_vertices": 24, "n_edges": 60, "iters": 2},
+    "kmeans": {},
+    "minebench": {},
+}
 
 BENCHES = [
     ("fusion", "benchmarks.bench_fusion"),
@@ -36,6 +50,10 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced problem sizes (CI perf-smoke job)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
     args = ap.parse_args()
     rows = []
     for name, mod_name in BENCHES:
@@ -43,13 +61,21 @@ def main() -> None:
             continue
         t0 = time.time()
         mod = __import__(mod_name, fromlist=["bench"])
+        kwargs = SMOKE_KWARGS.get(name, {}) if args.smoke else {}
         try:
-            rows.extend(mod.bench())
+            rows.extend(mod.bench(**kwargs))
             rows.append(f"_{name}_wall,{(time.time()-t0)*1e6:.0f},")
         except Exception as e:  # keep the harness going; record the failure
             rows.append(f"_{name}_FAILED,0,{type(e).__name__}:{e}")
             print(f"[bench] {name} failed: {e}", file=sys.stderr)
     emit(rows)
+    if args.json:
+        recs = []
+        for r in rows:
+            n, us, derived = r.split(",", 2)
+            recs.append({"name": n, "us_per_call": float(us), "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump(recs, f, indent=1)
 
 
 if __name__ == "__main__":

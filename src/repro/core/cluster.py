@@ -19,9 +19,10 @@ import numpy as np
 from repro.core import compat
 from repro.core.context import IContext
 from repro.core.dag import DagEngine, TaskNode
+from repro.core.shuffle_plan import ShuffleManager
 from repro.core.dataframe import IDataFrame
 from repro.core.native import get_app, load_library
-from repro.core.partition import Block, from_host
+from repro.core.partition import Block, block_aval, from_host
 from repro.core.properties import IProperties
 from repro.core.textlambda import ISource
 
@@ -95,6 +96,13 @@ class IWorker:
         self.mode = cluster.props.get("ignis.mode", "ignis")
         self.capacity_factor = cluster.props.get_float("ignis.shuffle.capacity.factor", 2.0)
         self.join_max_matches = cluster.props.get_int("ignis.join.max.matches", 8)
+        self.shuffle = ShuffleManager(
+            self.context,
+            capacity_factor=self.capacity_factor,
+            join_max_matches=self.join_max_matches,
+            plan_cache_size=cluster.props.get_int("ignis.shuffle.plan.cache.size", 64),
+            headroom=cluster.props.get_float("ignis.shuffle.memory.headroom", 1.25),
+        )
         self._libraries: list[str] = []
         cluster.workers.append(self)
 
@@ -102,13 +110,20 @@ class IWorker:
     # introspection: stage compilation (DESIGN.md §5)
     # ------------------------------------------------------------------
     def explain(self, df: IDataFrame) -> str:
-        """Physical plan of a frame's lineage — fused stages + boundaries."""
-        return self.engine.explain(df.node)
+        """Physical plan of a frame's lineage — fused stages + boundaries,
+        shuffle capacity annotations, shuffle telemetry."""
+        return df.explain()
 
     def stage_stats(self) -> dict:
         """Engine telemetry snapshot: node/block computes, fused stage runs,
         plan-cache hits/misses/evictions."""
         return dict(self.engine.stats)
+
+    def shuffle_stats(self) -> dict:
+        """Adaptive shuffle engine telemetry (DESIGN.md §6): exchanges,
+        overflow/fan-out retries, deferred checks, capacity-memory hits,
+        wide-plan compiles/hits, bytes moved."""
+        return dict(self.shuffle.stats)
 
     # ------------------------------------------------------------------
     # data ingestion (driver communicator)
@@ -136,6 +151,9 @@ class IWorker:
         node = TaskNode("parallelize", [], fn=lambda _: blk, narrow=False)
         node.result = blk
         node.cached = True
+        # structural source signature: re-parallelizing same-shaped data maps
+        # to the same lineage signature (shuffle capacity memory, DESIGN.md §6)
+        node.sig = ("src", tuple(block_aval(b) for b in blk))
         return IDataFrame(self, node)
 
     def text_file(self, path: str, as_tokens: bool = False, blocks: int = 1):

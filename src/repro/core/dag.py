@@ -45,6 +45,13 @@ class TaskNode:
     # spark-mode pipe-wrapped ops, non-traceable partition fns).
     fuse_fn: Optional[Callable] = None
     fuse_key: Optional[tuple] = None
+    # structural lineage signature (set by the dataframe layer): identifies
+    # "the same computation" across actions and across re-built lineages —
+    # the key of the shuffle engine's capacity memory (DESIGN.md §6). For
+    # shuffle-backed wide ops, shuffle_sig is set (= sig) so explain() can
+    # annotate the node with its capacity state.
+    sig: Optional[tuple] = None
+    shuffle_sig: Optional[tuple] = None
     id: int = field(default_factory=lambda: next(_ids))
     # runtime state
     result: Optional[list] = None  # list[Block] when materialised
@@ -55,6 +62,12 @@ class TaskNode:
 
     def __eq__(self, other):
         return self is other
+
+
+def node_sig(node: "TaskNode") -> tuple:
+    """The node's structural signature, falling back to an id-unique tuple
+    (still stable across repeated actions on the same node)."""
+    return node.sig if node.sig is not None else ("id", node.id)
 
 
 class FusedStage:
@@ -83,16 +96,9 @@ class FusedStage:
 
 
 def _block_aval(block) -> tuple:
-    """Hashable shape/dtype summary of a Block — the cache-key half that makes
-    a compiled plan reusable only for compatible block geometry."""
-    import jax
+    from repro.core.partition import block_aval
 
-    leaves, treedef = jax.tree_util.tree_flatten(block.data)
-    return (
-        treedef,
-        tuple((l.shape, str(l.dtype)) for l in leaves),
-        block.valid.shape,
-    )
+    return block_aval(block)
 
 
 class DagEngine:
@@ -107,6 +113,7 @@ class DagEngine:
         self._plan_cache: "OrderedDict[tuple, Callable]" = OrderedDict()
         self.stats = {
             "node_computes": 0,
+            "wide_computes": 0,
             "block_recomputes": 0,
             "fused_stages": 0,
             "fused_ops": 0,
@@ -184,8 +191,11 @@ class DagEngine:
                 absorbed.update(chain)
         return plans
 
-    def explain(self, root: TaskNode) -> str:
-        """Render the physical plan — which operators fuse into which stages."""
+    def explain(self, root: TaskNode, annotate=None) -> str:
+        """Render the physical plan — which operators fuse into which stages.
+
+        ``annotate(node) -> str`` lets another subsystem append per-node
+        state (the shuffle engine adds capacity-memory annotations)."""
         plans = self.plan(root)
         lines = ["== physical plan =="]
         emitted: set[int] = set()
@@ -217,7 +227,8 @@ class DagEngine:
                 )
                 parents = stage.head.parents
             else:
-                lines.append("  " * depth + f"{node.op}#{node.id}{tags(node)}")
+                extra = annotate(node) if annotate is not None else ""
+                lines.append("  " * depth + f"{node.op}#{node.id}{tags(node)}{extra}")
                 parents = node.parents
             stack.extend((p, depth + 1) for p in reversed(parents))
         return "\n".join(lines)
@@ -285,6 +296,7 @@ class DagEngine:
             return [
                 node.block_fn([pr[i] for pr in parent_results]) for i in range(nblocks)
             ]
+        self.stats["wide_computes"] += 1
         return node.fn(parent_results)
 
     def _compute_stage(self, stage: FusedStage, memo: dict, plans: dict):

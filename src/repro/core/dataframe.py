@@ -8,6 +8,13 @@ paper measures against.
 
 Row functions may be Python callables, ``ISource`` wrappers or text lambdas
 (paper §4.2) — resolved by ``textlambda.resolve``.
+
+Wide (shuffle-backed) operators route through the worker's adaptive shuffle
+engine (``shuffle_plan.ShuffleManager``, DESIGN.md §6): each registers a
+structural lineage signature so capacities are remembered across actions and
+re-built lineages. Per-operator semantics (wide/narrow classification,
+fusability, capacity/padding behavior, spark mode) are documented in
+docs/dataframe.md.
 """
 from __future__ import annotations
 
@@ -18,11 +25,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compat
 from repro.core import executor as ex
 from repro.core import shuffle as sh
-from repro.core.dag import TaskNode
+from repro.core.dag import TaskNode, node_sig
 from repro.core.partition import Block, concat_blocks, from_host, split_block, to_host
+from repro.core.shuffle_plan import _static_token, fn_token
 from repro.core.textlambda import resolve
 
 
@@ -67,18 +74,38 @@ class IDataFrame:
             return _k(ps[0])
 
         fuse_fn = kernel if fusable else None
-        fuse_key = (op, *key) if fuse_fn is not None else None
+        # fn-valued key parts are tokenised structurally (code + closure
+        # cells), so a re-built identical lineage maps to the same fuse_key →
+        # same plan-cache entry and the same shuffle capacity-memory slot.
+        tkey = tuple(fn_token(k) if callable(k) else k for k in key)
+        fuse_key = (op, *tkey) if fuse_fn is not None else None
         if self.worker.mode == "spark":
             block_fn = self.worker._pipe_wrap(block_fn)
             fuse_fn = fuse_key = None
         node = TaskNode(op, [self.node], block_fn=block_fn, narrow=True,
                         fuse_fn=fuse_fn, fuse_key=fuse_key)
+        node.sig = ("n", fuse_key if fuse_key is not None else (op, node.id),
+                    node_sig(self.node))
         return IDataFrame(self.worker, node)
 
-    def _wide(self, op: str, fn, extra_parents=()) -> "IDataFrame":
+    def _wide(self, op: str, fn, extra_parents=(), key: tuple = (),
+              shuffle: bool = False, needs_sig: bool = False) -> "IDataFrame":
+        """Register a wide op. ``key`` extends the structural signature;
+        ``needs_sig=True`` ops receive ``fn(parent_results, sig)`` so they can
+        consult the shuffle engine's capacity memory; ``shuffle=True`` marks
+        the node for explain()'s capacity annotations."""
+        parents = [self.node, *extra_parents]
+        tkey = tuple(fn_token(k) if callable(k) else k for k in key)
+        sig = ("w", op, *tkey, *(node_sig(p) for p in parents))
+        if needs_sig:
+            inner = fn
+            fn = lambda prs, _inner=inner, _sig=sig: _inner(prs, _sig)  # noqa: E731
         if self.worker.mode == "spark":
             fn = self.worker._pipe_wrap_wide(fn)
-        node = TaskNode(op, [self.node, *extra_parents], fn=fn, narrow=False)
+        node = TaskNode(op, parents, fn=fn, narrow=False)
+        node.sig = sig
+        if shuffle:
+            node.shuffle_sig = sig
         return IDataFrame(self.worker, node)
 
     def _blocks(self) -> list[Block]:
@@ -179,75 +206,41 @@ class IDataFrame:
 
     def distinct(self, key_fn=None) -> "IDataFrame":
         key_fn = resolve(key_fn) if key_fn else _pack_default
-        ctx = self._ctx
+        worker = self.worker
 
-        def fn(parent_results):
+        def fn(parent_results, sig):
             b = concat_blocks(parent_results[0])
-            sb, keys = sh.sort_block(ctx, b, key_fn, self.worker.capacity_factor)
-            heads = sh.segment_heads(keys, sb.valid)
-            return [Block(sb.data, heads)]
+            return [worker.shuffle.distinct(sig, b, key_fn)]
 
-        return self._wide("distinct", fn)
+        return self._wide("distinct", fn, key=(key_fn,), shuffle=True,
+                          needs_sig=True)
 
     def join(self, other: "IDataFrame", max_matches: int | None = None) -> "IDataFrame":
         """Inner join of two KV frames → rows (key, (lvalue, rvalue))."""
         M = max_matches or self.worker.join_max_matches
-        ctx = self._ctx
-        cf = self.worker.capacity_factor
+        worker = self.worker
 
-        def fn(parent_results):
+        def fn(parent_results, sig):
             lb = concat_blocks(parent_results[0])
             rb = concat_blocks(parent_results[1])
-            lk, lv, ld, o1 = sh.hash_exchange(ctx, lb.data["key"], lb.valid,
-                                              lb.data["value"], cf)
-            rk, rv, rd, o2 = sh.hash_exchange(ctx, rb.data["key"], rb.valid,
-                                              rb.data["value"], cf)
-            if int(jax.device_get(o1)) or int(jax.device_get(o2)):
-                big = float(ctx.executors)
-                lk, lv, ld, _ = sh.hash_exchange(ctx, lb.data["key"], lb.valid,
-                                                 lb.data["value"], big)
-                rk, rv, rd, _ = sh.hash_exchange(ctx, rb.data["key"], rb.valid,
-                                                 rb.data["value"], big)
-            p = ctx.executors
-            m = M
-            for _attempt in range(5):  # overflow → double the fan-out bound
-                if p == 1:
-                    rows, ok, ovf = sh.local_join(lk, lv, ld, rk, rv, rd, m)
-                else:
-                    from jax.sharding import PartitionSpec as P
+            return [worker.shuffle.join(sig, lb, rb, M)]
 
-                    def _local(a, b, c, d, e, g, m=m):
-                        rows, ok, ovf = sh.local_join(a, b, c, d, e, g, m)
-                        return rows, ok, jax.lax.psum(ovf, ctx.axis)
-
-                    f = compat.shard_map(
-                        _local,
-                        mesh=ctx.mesh,
-                        in_specs=(P(ctx.axis),) * 6,
-                        out_specs=(P(ctx.axis), P(ctx.axis), P()),
-                    )
-                    rows, ok, ovf = f(lk, lv, ld, rk, rv, rd)
-                if int(jax.device_get(jnp.sum(ovf))) == 0:
-                    break
-                m *= 2
-            return [Block(rows, ok)]
-
-        return self._wide("join", fn, extra_parents=[other.node])
+        return self._wide("join", fn, extra_parents=[other.node], key=(M,),
+                          shuffle=True, needs_sig=True)
 
     # ------------------------------------------------------------------
     # sort / group / reduceByKey
     # ------------------------------------------------------------------
     def sort_by(self, key_fn, ascending: bool = True) -> "IDataFrame":
         key_fn = resolve(key_fn)
-        ctx = self._ctx
-        cf = self.worker.capacity_factor
+        worker = self.worker
 
-        def fn(parent_results):
+        def fn(parent_results, sig):
             b = concat_blocks(parent_results[0])
-            sb, _ = sh.sort_block(ctx, b, key_fn, cf, ascending)
-            return [sb]
+            return [worker.shuffle.sort(sig, b, key_fn, ascending)]
 
-        return self._wide("sortBy", fn)
+        return self._wide("sortBy", fn, key=(key_fn, ascending), shuffle=True,
+                          needs_sig=True)
 
     def sort(self, ascending: bool = True) -> "IDataFrame":
         return self.sort_by(lambda r: r, ascending)
@@ -257,17 +250,14 @@ class IDataFrame:
 
     def reduce_by_key(self, fn, identity=0) -> "IDataFrame":
         fn = resolve(fn)
-        ctx = self._ctx
-        cf = self.worker.capacity_factor
+        worker = self.worker
 
-        def node_fn(parent_results):
+        def node_fn(parent_results, sig):
             b = concat_blocks(parent_results[0])
-            sb, keys = sh.sort_block(ctx, b, lambda r: r["key"], cf)
-            vfn = lambda a, b2: jax.tree.map(lambda x, y: fn(x, y), a, b2)
-            heads, red = sh.segmented_reduce(keys, sb.valid, sb.data["value"], vfn, identity)
-            return [Block({"key": sb.data["key"], "value": red}, heads)]
+            return [worker.shuffle.reduce_by_key(sig, b, fn, identity)]
 
-        return self._wide("reduceByKey", node_fn)
+        return self._wide("reduceByKey", node_fn, key=(fn, _static_token(identity)),
+                          shuffle=True, needs_sig=True)
 
     def aggregate_by_key(self, zero, seq_fn, comb_fn) -> "IDataFrame":
         seq_fn, comb_fn = resolve(seq_fn), resolve(comb_fn)
@@ -276,30 +266,15 @@ class IDataFrame:
 
     def group_by_key(self, group_capacity: int = 8) -> "IDataFrame":
         """Rows (key, (values[G], count)) at segment heads; G-bounded groups."""
-        ctx = self._ctx
-        cf = self.worker.capacity_factor
+        worker = self.worker
         G = group_capacity
 
-        def node_fn(parent_results):
+        def node_fn(parent_results, sig):
             b = concat_blocks(parent_results[0])
-            sb, keys = sh.sort_block(ctx, b, lambda r: r["key"], cf)
-            heads = sh.segment_heads(keys, sb.valid)
-            n = keys.shape[0]
-            idx = jnp.arange(n)
-            raw = idx[:, None] + jnp.arange(G)[None, :]
-            gidx = jnp.clip(raw, 0, n - 1)
-            same = (keys[gidx] == keys[:, None]) & sb.valid[gidx] & (raw < n)
-            vals = jax.tree.map(lambda x: x[gidx], sb.data["value"])
-            counts = same.sum(-1)
-            return [
-                Block(
-                    {"key": sb.data["key"], "value": {"items": vals, "mask": same,
-                                                      "count": counts}},
-                    heads,
-                )
-            ]
+            return [worker.shuffle.group_by_key(sig, b, G)]
 
-        return self._wide("groupByKey", node_fn)
+        return self._wide("groupByKey", node_fn, key=(G,), shuffle=True,
+                          needs_sig=True)
 
     def group_by(self, key_fn, group_capacity: int = 8) -> "IDataFrame":
         return self.key_by(key_fn).group_by_key(group_capacity)
@@ -325,19 +300,14 @@ class IDataFrame:
 
     def partition_by(self, key_fn=None) -> "IDataFrame":
         key_fn = resolve(key_fn) if key_fn else _pack_default
-        ctx = self._ctx
-        cf = self.worker.capacity_factor
+        worker = self.worker
 
-        def fn(parent_results):
+        def fn(parent_results, sig):
             b = concat_blocks(parent_results[0])
-            keys = jax.vmap(key_fn)(b.data)
-            k2, v2, d2, ovf = sh.hash_exchange(ctx, keys, b.valid, b.data, cf)
-            if int(jax.device_get(ovf)) > 0:
-                k2, v2, d2, _ = sh.hash_exchange(ctx, keys, b.valid, b.data,
-                                                 float(ctx.executors))
-            return [Block(d2, v2)]
+            return [worker.shuffle.partition_by(sig, b, key_fn)]
 
-        return self._wide("partitionBy", fn)
+        return self._wide("partitionBy", fn, key=(key_fn,), shuffle=True,
+                          needs_sig=True)
 
     partitionBy = partition_by
 
@@ -376,8 +346,13 @@ class IDataFrame:
 
     def explain(self) -> str:
         """Physical plan for this frame's lineage: which narrow ops the
-        planner fuses into single-dispatch stages (DESIGN.md §5)."""
-        return self._engine.explain(self.node)
+        planner fuses into single-dispatch stages (DESIGN.md §5), wide nodes
+        annotated with their shuffle capacity state, plus the shuffle
+        engine's telemetry summary (DESIGN.md §6)."""
+        mgr = getattr(self.worker, "shuffle", None)
+        plan = self._engine.explain(self.node,
+                                    annotate=mgr.annotate if mgr else None)
+        return plan + ("\n" + mgr.summary() if mgr else "")
 
     # ------------------------------------------------------------------
     # actions
@@ -408,15 +383,37 @@ class IDataFrame:
         return self.map(lambda r: r).reduce(fn, zero)
 
     def max(self, key_fn=None):
-        df = self if key_fn is None else self
-        b = df._merged()
-        vfn = lambda a, c: jax.tree.map(jnp.maximum, a, c)
-        return jax.device_get(ex.pairwise_reduce(b.data, b.valid, vfn, -jnp.inf))
+        """Without key_fn: elementwise tree-max of valid rows. With key_fn:
+        the ROW maximising key_fn(row) (Spark's max(key=...) — argmax)."""
+        return self._extreme(key_fn, largest=True)
 
     def min(self, key_fn=None):
+        """Without key_fn: elementwise tree-min. With key_fn: the row
+        minimising key_fn(row) (argmin)."""
+        return self._extreme(key_fn, largest=False)
+
+    def _extreme(self, key_fn, largest: bool):
         b = self._merged()
-        vfn = lambda a, c: jax.tree.map(jnp.minimum, a, c)
-        return jax.device_get(ex.pairwise_reduce(b.data, b.valid, vfn, jnp.inf))
+        if key_fn is None:
+            op = jnp.maximum if largest else jnp.minimum
+            sent = sh._sentinel_low if largest else sh._sentinel
+            ident = jax.tree.map(lambda x: sent(x.dtype), b.data)
+            vfn = lambda a, c: jax.tree.map(op, a, c)
+            return jax.device_get(ex.pairwise_reduce(b.data, b.valid, vfn, ident))
+        key_fn = resolve(key_fn)
+        keys = jax.vmap(key_fn)(b.data)
+        sent = (sh._sentinel_low if largest else sh._sentinel)(keys.dtype)
+        masked = jnp.where(b.valid, keys, sent)
+        i = int(jax.device_get(jnp.argmax(masked) if largest else jnp.argmin(masked)))
+        if not bool(jax.device_get(b.valid[i])):
+            # a valid row tying the sentinel can shadow the winner; fall back
+            # to the host (also the empty-frame path)
+            rows = self.collect()
+            if not rows:
+                raise ValueError("max()/min() with key_fn on an empty dataframe")
+            pick = max if largest else min
+            return pick(rows, key=lambda r: float(np.asarray(key_fn(r))))
+        return jax.device_get(jax.tree.map(lambda x: x[i], b.data))
 
     def collect(self) -> list:
         out = []

@@ -33,6 +33,19 @@ class Block:
         return {"data": self.data, "valid": self.valid}
 
 
+def block_aval(block: "Block") -> tuple:
+    """Hashable shape/dtype summary of a Block — the cache-key half that
+    makes a compiled plan (narrow or wide) reusable only for compatible
+    block geometry. Shared by the DAG plan cache, the shuffle engine's
+    wide-plan cache, and source-node lineage signatures."""
+    leaves, treedef = jax.tree_util.tree_flatten(block.data)
+    return (
+        treedef,
+        tuple((l.shape, str(l.dtype)) for l in leaves),
+        block.valid.shape,
+    )
+
+
 def rows_of(data) -> int:
     return jax.tree.leaves(data)[0].shape[0]
 

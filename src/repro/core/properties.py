@@ -18,6 +18,8 @@ DEFAULTS = {
     "ignis.scheduler": "local",  # local | slurm-sim (launch/submit.py)
     "ignis.mode": "ignis",  # ignis | spark  (spark = round-trip baseline)
     "ignis.shuffle.capacity.factor": "2.0",
+    "ignis.shuffle.plan.cache.size": "64",  # compiled wide-stage LRU entries
+    "ignis.shuffle.memory.headroom": "1.25",  # capacity-memory fit margin
     "ignis.join.max.matches": "8",
     "ignis.transport.compression": "0",
     "ignis.fault.max.retries": "2",

@@ -8,14 +8,23 @@
   (the jnp oracle of kernels/segment_reduce).
 * sort-merge / hash join with bounded fan-out.
 
-All fixed-shape: buckets are capacity-padded, overflow is detected (psum)
-and the driver retries with worst-case capacity — the price of static shapes
-on a systolic machine, recorded in DESIGN.md.
+All fixed-shape: buckets are capacity-padded, overflow is *detected* (psum),
+never silently dropped — the price of static shapes on a systolic machine
+(DESIGN.md §1). This module is sync-free: every stage returns device scalars
+``(overflow, max_fill)`` alongside its data, and the adaptive shuffle engine
+(shuffle_plan.py, DESIGN.md §6) performs one deferred host check per wide
+node, retries with a capacity derived from the observed ``max_fill``, and
+remembers the fit for the next action.
+
+Stages take a ``post`` hook — a per-shard local transform fused into the same
+shard_map body — so sort→segment-heads→segmented-reduce chains (reduceByKey,
+distinct, groupByKey) execute as ONE wide stage instead of three dispatches.
+Post hooks are valid because PSRS/hash routing sends equal keys to one shard:
+no key segment ever spans a shard boundary.
 """
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +36,17 @@ from repro.core.partition import Block
 
 
 def _sentinel(dtype):
+    """Largest value of dtype — sorts invalid rows to the tail."""
     if jnp.issubdtype(dtype, jnp.floating):
         return jnp.asarray(jnp.inf, dtype)
     return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+def _sentinel_low(dtype):
+    """Smallest value of dtype — masks invalid rows out of an argmax."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(-jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
 
 
 def _hash_u32(x):
@@ -38,6 +55,14 @@ def _hash_u32(x):
     h = (h ^ (h >> 16)) * jnp.uint32(0x7FEB352D)
     h = (h ^ (h >> 15)) * jnp.uint32(0x846CA68B)
     return h ^ (h >> 16)
+
+
+def capacity_for(factor: float, n_local: int, p: int) -> int:
+    """Per-destination bucket capacity for a given capacity factor.
+
+    ``factor = p`` is the worst case: C = n_local fits even when every row
+    of a shard routes to one destination."""
+    return max(int(math.ceil(factor * n_local / p)), 1)
 
 
 # ---------------------------------------------------------------------------
@@ -49,8 +74,10 @@ def _pack_exchange(dest, payload, axis, p, C):
     """Inside shard_map: route rows to `dest` buckets with capacity C.
 
     dest: (n,) int32 in [0, p); payload: pytree of (n, …) leaves (must include
-    its own validity leaf). Returns (pytree of (p·C, …), overflow_count).
-    Dropped rows (bucket overflow) are counted, not silently lost.
+    its own validity leaf). Returns (pytree of (p·C, …), overflow, max_fill).
+    Dropped rows (bucket overflow) are counted, not silently lost; max_fill is
+    the largest bucket demand observed — the capacity that *would* have fit,
+    independent of C, so one retry sized from it always succeeds.
     """
     n = dest.shape[0]
     order = jnp.argsort(dest, stable=True)
@@ -60,7 +87,8 @@ def _pack_exchange(dest, payload, axis, p, C):
     pos = jnp.arange(n) - starts[ds]
     keep = pos < C
     slot = jnp.where(keep, ds * C + pos, p * C)  # overflow → scratch slot
-    overflow = n - keep.sum()
+    overflow = (n - keep.sum()).astype(jnp.int32)
+    max_fill = counts.max().astype(jnp.int32)
 
     def pack(x):
         xs = x[order]
@@ -75,35 +103,36 @@ def _pack_exchange(dest, payload, axis, p, C):
         y = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0, tiled=False)
         return y.reshape(p * C, *x.shape[1:])
 
-    return jax.tree.map(xchg, packed), overflow
+    return jax.tree.map(xchg, packed), overflow, max_fill
 
 
 # ---------------------------------------------------------------------------
-# PSRS sort
+# fused wide stages (PSRS sort / hash exchange + local post-transform)
 # ---------------------------------------------------------------------------
 
 
-def psrs_sort(ctx: IContext, keys, valid, data, capacity_factor=2.0):
-    """Distributed sort by `keys`. All inputs axis-sharded on dim 0.
+def _passthrough(k, v, d):
+    return d, v
 
-    Returns (keys', valid', data', overflow) — globally sorted (shard i holds
-    keys ≤ shard i+1), invalid rows pushed to the tail of the last shard.
-    Output has capacity_factor× the rows (padding).
+
+def sort_stage(ctx: IContext, keys, valid, data, C: int, post=None):
+    """One fused wide sort stage, no host syncs.
+
+    PSRS exchange + local merge + ``post`` (a per-shard local transform;
+    default returns ``(data, valid)``) traced as a single computation.
+    Returns ``(post_out, overflow, max_fill)`` — the scalars are replicated
+    int32 device values; the caller decides when (if ever) to sync on them.
     """
+    post = post or _passthrough
     p = ctx.executors
+    zero = jnp.zeros((), jnp.int32)
     if p == 1:
         big = _sentinel(keys.dtype)
-        k = jnp.where(valid, keys, big)
-        order = jnp.argsort(k, stable=True)
-        return (
-            keys[order],
-            valid[order],
-            jax.tree.map(lambda x: x[order], data),
-            jnp.zeros((), jnp.int32),
-        )
+        order = jnp.argsort(jnp.where(valid, keys, big), stable=True)
+        out = post(keys[order], valid[order], jax.tree.map(lambda x: x[order], data))
+        return out, zero, zero
 
     n_local = keys.shape[0] // p
-    C = max(int(math.ceil(capacity_factor * n_local / p)), 1)
 
     def f(k, v, d):
         big = _sentinel(k.dtype)
@@ -119,36 +148,115 @@ def psrs_sort(ctx: IContext, keys, valid, data, capacity_factor=2.0):
         pivots = jnp.sort(all_samples)[p - 1 :: p][: p - 1]
         dest = jnp.searchsorted(pivots, ks, side="right").astype(jnp.int32)
         payload = {"k": korig, "valid": vs, "data": ds}
-        out, overflow = _pack_exchange(dest, payload, ctx.axis, p, C)
+        out, overflow, fill = _pack_exchange(dest, payload, ctx.axis, p, C)
         # local merge
         big2 = _sentinel(out["k"].dtype)
         km = jnp.where(out["valid"], out["k"], big2)
         order2 = jnp.argsort(km, stable=True)
         res = jax.tree.map(lambda x: x[order2], out)
-        return res["k"], res["valid"], res["data"], jax.lax.psum(overflow, ctx.axis)
+        return (
+            post(res["k"], res["valid"], res["data"]),
+            jax.lax.psum(overflow, ctx.axis),
+            jax.lax.pmax(fill, ctx.axis),
+        )
 
     fn = compat.shard_map(
         f,
         mesh=ctx.mesh,
         in_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis)),
-        out_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis), P()),
+        out_specs=(P(ctx.axis), P(), P()),
     )
     return fn(keys, valid, data)
 
 
-def sort_block(ctx: IContext, b: Block, key_fn, capacity_factor=2.0, ascending=True):
-    keys = jax.vmap(key_fn)(b.data)
-    if not ascending:
-        keys = -keys
-    k, v, d, ovf = psrs_sort(ctx, keys, b.valid, b.data, capacity_factor)
-    if int(jax.device_get(ovf)) > 0:  # retry with worst-case capacity
-        k, v, d, ovf = psrs_sort(ctx, keys, b.valid, b.data, float(ctx.executors))
-    return Block(d, v), (k if ascending else -k)
+def hash_stage(ctx: IContext, keys, valid, data, C: int, post=None):
+    """One fused wide hash-exchange stage (partitionBy / reduce routing), no
+    host syncs. Same contract as ``sort_stage``; equal keys land on one
+    executor but arrive unsorted."""
+    post = post or _passthrough
+    p = ctx.executors
+    zero = jnp.zeros((), jnp.int32)
+    if p == 1:
+        return post(keys, valid, data), zero, zero
+
+    def f(k, v, d):
+        dest = (_hash_u32(k) % jnp.uint32(p)).astype(jnp.int32)
+        dest = jnp.where(v, dest, p - 1)  # park invalid rows anywhere stable
+        payload = {"k": k, "valid": v, "data": d}
+        out, overflow, fill = _pack_exchange(dest, payload, ctx.axis, p, C)
+        return (
+            post(out["k"], out["valid"], out["data"]),
+            jax.lax.psum(overflow, ctx.axis),
+            jax.lax.pmax(fill, ctx.axis),
+        )
+
+    fn = compat.shard_map(
+        f,
+        mesh=ctx.mesh,
+        in_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis)),
+        out_specs=(P(ctx.axis), P(), P()),
+    )
+    return fn(keys, valid, data)
+
+
+def join_stage(ctx: IContext, lk, lvalid, lvals, rk, rvalid, rvals,
+               Cl: int, Cr: int, M: int):
+    """Both-side hash exchange + local sort-merge join in ONE wide stage.
+
+    Returns ``(rows, ok, exch_overflow, lfill, rfill, fan_overflow)`` — four
+    replicated int32 scalars fetched by the caller in a single deferred sync:
+    exchange overflow retries with capacities sized from the fills; fan-out
+    overflow retries with a doubled per-key match bound M.
+    """
+    p = ctx.executors
+    zero = jnp.zeros((), jnp.int32)
+    if p == 1:
+        rows, ok, fovf = local_join(lk, lvalid, lvals, rk, rvalid, rvals, M)
+        return rows, ok, zero, zero, zero, fovf.astype(jnp.int32)
+
+    def f(lk_, lv_, ld_, rk_, rv_, rd_):
+        ldest = jnp.where(lv_, (_hash_u32(lk_) % jnp.uint32(p)).astype(jnp.int32), p - 1)
+        rdest = jnp.where(rv_, (_hash_u32(rk_) % jnp.uint32(p)).astype(jnp.int32), p - 1)
+        lout, lovf, lfill = _pack_exchange(
+            ldest, {"k": lk_, "valid": lv_, "data": ld_}, ctx.axis, p, Cl)
+        rout, rovf, rfill = _pack_exchange(
+            rdest, {"k": rk_, "valid": rv_, "data": rd_}, ctx.axis, p, Cr)
+        rows, ok, fovf = local_join(
+            lout["k"], lout["valid"], lout["data"],
+            rout["k"], rout["valid"], rout["data"], M)
+        return (
+            rows,
+            ok,
+            jax.lax.psum(lovf + rovf, ctx.axis),
+            jax.lax.pmax(lfill, ctx.axis),
+            jax.lax.pmax(rfill, ctx.axis),
+            jax.lax.psum(fovf.astype(jnp.int32), ctx.axis),
+        )
+
+    fn = compat.shard_map(
+        f,
+        mesh=ctx.mesh,
+        in_specs=(P(ctx.axis),) * 6,
+        out_specs=(P(ctx.axis), P(ctx.axis), P(), P(), P(), P()),
+    )
+    return fn(lk, lvalid, lvals, rk, rvalid, rvals)
 
 
 # ---------------------------------------------------------------------------
-# hash exchange (partitionBy / reduceByKey / join routing)
+# legacy single-shot wrappers (direct-primitive tests; no retry, no memory)
 # ---------------------------------------------------------------------------
+
+
+def psrs_sort(ctx: IContext, keys, valid, data, capacity_factor=2.0):
+    """Distributed sort by `keys`. All inputs axis-sharded on dim 0.
+
+    Returns (keys', valid', data', overflow) — globally sorted (shard i holds
+    keys ≤ shard i+1), invalid rows pushed to the tail of each shard."""
+    p = ctx.executors
+    C = capacity_for(capacity_factor, keys.shape[0] // max(p, 1), p)
+    out, ovf, _ = sort_stage(ctx, keys, valid, data, C, post=lambda k, v, d: (k, v, d))
+    k, v, d = out
+    return k, v, d, ovf
 
 
 def hash_exchange(ctx: IContext, keys, valid, data, capacity_factor=2.0):
@@ -157,23 +265,10 @@ def hash_exchange(ctx: IContext, keys, valid, data, capacity_factor=2.0):
     p = ctx.executors
     if p == 1:
         return keys, valid, data, jnp.zeros((), jnp.int32)
-    n_local = keys.shape[0] // p
-    C = max(int(math.ceil(capacity_factor * n_local / p)), 1)
-
-    def f(k, v, d):
-        dest = (_hash_u32(k) % jnp.uint32(p)).astype(jnp.int32)
-        dest = jnp.where(v, dest, p - 1)  # park invalid rows anywhere stable
-        payload = {"k": k, "valid": v, "data": d}
-        out, overflow = _pack_exchange(dest, payload, ctx.axis, p, C)
-        return out["k"], out["valid"], out["data"], jax.lax.psum(overflow, ctx.axis)
-
-    fn = compat.shard_map(
-        f,
-        mesh=ctx.mesh,
-        in_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis)),
-        out_specs=(P(ctx.axis), P(ctx.axis), P(ctx.axis), P()),
-    )
-    return fn(keys, valid, data)
+    C = capacity_for(capacity_factor, keys.shape[0] // p, p)
+    out, ovf, _ = hash_stage(ctx, keys, valid, data, C, post=lambda k, v, d: (k, v, d))
+    k, v, d = out
+    return k, v, d, ovf
 
 
 # ---------------------------------------------------------------------------
@@ -225,6 +320,48 @@ def segmented_reduce(keys, valid, values, fn, identity):
     last_pos = jnp.clip(jnp.where(nxt >= n, n - 1, nxt - 1), 0, n - 1)
     out = jax.tree.map(lambda s: s[last_pos], scanned)
     return heads, out
+
+
+# ---------------------------------------------------------------------------
+# post hooks: the sort→heads→reduce fusion targets (run per shard inside the
+# wide stage — valid because equal keys never span shards)
+# ---------------------------------------------------------------------------
+
+
+def heads_post(keys, valid, data):
+    """distinct: keep the first row of every equal-key run."""
+    return data, segment_heads(keys, valid)
+
+
+def make_reduce_post(fn, identity):
+    """reduceByKey: segmented reduce fused into the sort stage."""
+
+    def post(keys, valid, data):
+        heads, red = segmented_reduce(keys, valid, data["value"], fn, identity)
+        return {"key": data["key"], "value": red}, heads
+
+    return post
+
+
+def make_group_post(G: int):
+    """groupByKey: G-bounded gather of each key run, fused into the sort
+    stage. Rows (key, {items[G], mask[G], count}) at segment heads."""
+
+    def post(keys, valid, data):
+        heads = segment_heads(keys, valid)
+        n = keys.shape[0]
+        idx = jnp.arange(n)
+        raw = idx[:, None] + jnp.arange(G)[None, :]
+        gidx = jnp.clip(raw, 0, n - 1)
+        same = (keys[gidx] == keys[:, None]) & valid[gidx] & (raw < n)
+        vals = jax.tree.map(lambda x: x[gidx], data["value"])
+        counts = same.sum(-1)
+        return (
+            {"key": data["key"], "value": {"items": vals, "mask": same, "count": counts}},
+            heads,
+        )
+
+    return post
 
 
 # ---------------------------------------------------------------------------

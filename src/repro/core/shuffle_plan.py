@@ -1,0 +1,385 @@
+"""Adaptive shuffle engine (DESIGN.md §6): capacity memory, fused wide
+stages, deferred overflow checks, and shuffle telemetry.
+
+The static-shape tradeoff (DESIGN.md §1) makes every exchange capacity-bound:
+a bucket that overflows forces a retry at a new capacity, i.e. a fresh XLA
+compile — and the seed engine paid a host sync per exchange just to find out.
+The ``ShuffleManager`` closes that gap three ways:
+
+1. **Capacity memory.** Every wide node carries a structural lineage
+   signature; the manager remembers, per ``(signature, input rows)``, the
+   capacity factor that fit — sized from the *observed* max bucket demand,
+   not the worst case — so repeated actions (and re-built identical
+   lineages) pick a fitting capacity on the first try: zero retries, zero
+   recompiles.
+2. **Fused wide stages + wide-plan cache.** sort→segment-heads→segmented-
+   reduce chains (reduceByKey / distinct / groupByKey) trace as ONE jitted
+   stage (shuffle.sort_stage + post hook) instead of three dispatches;
+   compiled stages live in an LRU keyed by (op kind, capacity, fn tokens,
+   block avals) — the wide-op analogue of the narrow plan cache
+   (DESIGN.md §5).
+3. **Deferred overflow checks.** Stages return replicated device scalars;
+   the manager performs ONE host sync per wide node (none at p=1 for
+   sorts/exchanges), retries at a capacity derived from the observed fill
+   (guaranteed to fit — the fill is demand, independent of capacity), and
+   records the outcome.
+
+Telemetry lives in ``stats`` (exchanges, overflow/fan-out retries, deferred
+checks, capacity-memory hits, wide-plan compiles, bytes moved) — surfaced via
+``worker.shuffle_stats()`` and the ``== shuffle ==`` section of
+``df.explain()``.
+"""
+from __future__ import annotations
+
+import types
+from collections import OrderedDict
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import shuffle as sh
+from repro.core.partition import Block, block_aval as _block_aval
+
+
+class _Opaque(Exception):
+    """A captured value the token cannot represent faithfully — fall back to
+    the function object itself (identity-based, always correct)."""
+
+
+# value types whose (type, value) pair fully determines traced behavior
+_VALUE_TYPES = (int, float, bool, complex, str, bytes, type(None))
+
+
+def _code_names(code) -> set:
+    """Global names referenced by a code object, including nested lambdas."""
+    names = set(code.co_names)
+    for c in code.co_consts:
+        if isinstance(c, types.CodeType):
+            names |= _code_names(c)
+    return names
+
+
+def _val_token(v, seen: frozenset):
+    if isinstance(v, _VALUE_TYPES):
+        # tag with the type: 1, 1.0 and True compare equal in Python but
+        # trace to different dtypes — they must not share a compiled kernel
+        return (type(v).__name__, v)
+    if isinstance(v, tuple):
+        return ("tuple", tuple(_val_token(x, seen) for x in v))
+    if isinstance(v, types.ModuleType):
+        return ("module", v.__name__)
+    if callable(v):
+        return fn_token(v, seen)
+    raise _Opaque
+
+
+def fn_token(fn, _seen: frozenset = frozenset()):
+    """Structural identity of a row fn: (code, closure cells, defaults,
+    referenced-global values).
+
+    Two lambdas created by re-running the same source line share a code
+    object, so re-built lineages (benchmark loops, iterative drivers) map to
+    the same token and hit the capacity memory / plan cache. Behavior-bearing
+    state is part of the token: closure cell values, defaults, and the values
+    of module globals the code references (a rebuilt ``lambda x: x * SCALE``
+    after ``SCALE`` changed must NOT reuse the old plan). Falls back to the
+    function object itself — identity-based, always correct, just fewer
+    cross-rebuild hits — for bound methods (behavior lives in ``__self__``)
+    and whenever any captured value is not a plain value type (arrays,
+    arbitrary objects: their mutable state is invisible to a token).
+    """
+    code = getattr(fn, "__code__", None)
+    if code is None or getattr(fn, "__self__", None) is not None:
+        return fn
+    if id(fn) in _seen:  # self-referential function: code identifies the cycle
+        return ("recursive", code)
+    seen = _seen | {id(fn)}
+    try:
+        cells: tuple = ()
+        if getattr(fn, "__closure__", None):
+            cells = tuple(_val_token(c.cell_contents, seen) for c in fn.__closure__)
+        defaults = tuple(_val_token(v, seen)
+                         for v in (getattr(fn, "__defaults__", None) or ()))
+        g = getattr(fn, "__globals__", {})
+        gtok = tuple((name, _val_token(g[name], seen))
+                     for name in sorted(_code_names(code)) if name in g)
+        token = ("fn", code, cells, defaults, gtok)
+        hash(token)
+    except (_Opaque, TypeError):
+        return fn
+    return token
+
+
+def _static_token(x):
+    """Hashable token for a static pytree argument (e.g. a reduce identity).
+
+    Unhashable leaves (arrays) are fingerprinted by dtype/shape/bytes —
+    repr() would truncate large arrays and collide distinct identities."""
+    try:
+        hash(x)
+        return x
+    except TypeError:
+        leaves, treedef = jax.tree_util.tree_flatten(x)
+
+        def leaf(l):
+            a = np.asarray(l)
+            return (str(a.dtype), a.shape, a.tobytes())
+
+        return (treedef, tuple(leaf(l) for l in leaves))
+
+
+def _row_bytes(b: Block, key_bytes: int = 8) -> int:
+    """Approximate bytes per exchanged row (payload leaves + key + validity)."""
+    per = sum(
+        int(np.prod(l.shape[1:], dtype=np.int64)) * l.dtype.itemsize
+        for l in jax.tree.leaves(b.data)
+    )
+    return per + key_bytes + 1
+
+
+class ShuffleManager:
+    """Runs every wide (shuffle-backed) operator for one worker."""
+
+    MAX_ATTEMPTS = 8  # join retry bound (capacity + fan-out combined)
+    MEMORY_ENTRIES = 4096  # capacity/fan-out memory cap (FIFO eviction)
+
+    def __init__(self, ctx, *, capacity_factor: float = 2.0,
+                 join_max_matches: int = 8, plan_cache_size: int = 64,
+                 headroom: float = 1.25):
+        self.ctx = ctx
+        self.default_factor = float(capacity_factor)
+        self.join_max_matches = int(join_max_matches)
+        self.plan_cache_size = int(plan_cache_size)
+        self.headroom = float(headroom)
+        self._capacity: "OrderedDict[tuple, float]" = OrderedDict()
+        self._fanout: "OrderedDict[tuple, int]" = OrderedDict()
+        self._plans: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self.stats = {
+            "exchanges": 0,            # collective exchange stages executed
+            "overflow_retries": 0,     # capacity retries (recompile + rerun)
+            "fanout_retries": 0,       # join per-key match-bound doublings
+            "overflow_checks": 0,      # deferred host syncs performed
+            "capacity_memory_hits": 0,
+            "capacity_memory_misses": 0,
+            "wide_plan_hits": 0,
+            "wide_plan_misses": 0,     # wide-stage compiles
+            "wide_plan_evictions": 0,
+            "bytes_moved": 0,          # exchanged-buffer bytes (estimate)
+        }
+
+    # ------------------------------------------------------------------
+    # capacity memory
+    # ------------------------------------------------------------------
+    @property
+    def p(self) -> int:
+        return self.ctx.executors
+
+    def _factor(self, sig, rows) -> float:
+        f = self._capacity.get((sig, rows))
+        if f is not None:
+            self.stats["capacity_memory_hits"] += 1
+            return f
+        self.stats["capacity_memory_misses"] += 1
+        return self.default_factor
+
+    def _remember(self, sig, rows, factor: float):
+        mem = self._capacity
+        mem[(sig, rows)] = factor
+        while len(mem) > self.MEMORY_ENTRIES:
+            mem.popitem(last=False)
+
+    def _fit(self, fill: int, n_local: int) -> float:
+        """Capacity factor sized from observed bucket demand, with headroom,
+        capped at the guaranteed-fit worst case (factor = p)."""
+        base = fill * self.p / max(n_local, 1)
+        return float(min(max(base * self.headroom, self.default_factor), self.p))
+
+    # ------------------------------------------------------------------
+    # wide-plan cache (compiled stage kernels; analogue of DESIGN.md §5)
+    # ------------------------------------------------------------------
+    def _plan(self, key: tuple, builder: Callable[[], Callable]):
+        fn = self._plans.get(key)
+        if fn is not None:
+            self._plans.move_to_end(key)
+            self.stats["wide_plan_hits"] += 1
+            return fn
+        self.stats["wide_plan_misses"] += 1
+        fn = jax.jit(builder())
+        self._plans[key] = fn
+        while len(self._plans) > self.plan_cache_size:
+            self._plans.popitem(last=False)
+            self.stats["wide_plan_evictions"] += 1
+        return fn
+
+    def _account(self, b: Block, C: int):
+        if self.p > 1:
+            self.stats["exchanges"] += 1
+            self.stats["bytes_moved"] += self.p * self.p * C * _row_bytes(b)
+
+    def _adaptive(self, sig, rows, n_local: int, run) -> tuple:
+        """The shared capacity sequence for single-exchange wide ops:
+        memory lookup → run at the predicted capacity → one deferred
+        overflow check → at most one fitted retry → remember what fit.
+        ``run(C) -> (out, overflow, max_fill)``. The fitted retry cannot
+        overflow again: max_fill is bucket *demand*, independent of C."""
+        factor = self._factor(sig, rows)
+        out, ovf, fill = run(sh.capacity_for(factor, n_local, self.p))
+        if self.p > 1:
+            self.stats["overflow_checks"] += 1
+            n_ovf, n_fill = (int(x) for x in jax.device_get((ovf, fill)))
+            if n_ovf > 0:
+                self.stats["overflow_retries"] += 1
+                factor = self._fit(n_fill, n_local)
+                out, _, _ = run(sh.capacity_for(factor, n_local, self.p))
+        self._remember(sig, rows, factor)
+        return out
+
+    # ------------------------------------------------------------------
+    # sort-routed wide ops (sort / distinct / reduceByKey / groupByKey)
+    # ------------------------------------------------------------------
+    def _sorted(self, sig, b: Block, key_fn, ascending: bool, post, kind: tuple) -> Block:
+        rows = b.capacity
+        n_local = rows // max(self.p, 1)
+        data, valid = self._adaptive(
+            sig, rows, n_local,
+            lambda C: self._run_sort_stage(kind, C, b, key_fn, ascending, post))
+        return Block(data, valid)
+
+    def _run_sort_stage(self, kind, C, b, key_fn, ascending, post):
+        key = (kind, C, ascending, fn_token(key_fn), _block_aval(b))
+        ctx = self.ctx
+
+        def builder():
+            def run(data, valid):
+                keys = jax.vmap(key_fn)(data)
+                if not ascending:
+                    keys = -keys
+                return sh.sort_stage(ctx, keys, valid, data, C, post)
+
+            return run
+
+        fn = self._plan(key, builder)
+        self._account(b, C)
+        return fn(b.data, b.valid)
+
+    def sort(self, sig, b: Block, key_fn, ascending: bool = True) -> Block:
+        return self._sorted(sig, b, key_fn, ascending, None, ("sort",))
+
+    def distinct(self, sig, b: Block, key_fn) -> Block:
+        return self._sorted(sig, b, key_fn, True, sh.heads_post, ("distinct",))
+
+    def reduce_by_key(self, sig, b: Block, fn, identity) -> Block:
+        vfn = lambda a, c: jax.tree.map(lambda x, y: fn(x, y), a, c)  # noqa: E731
+        post = sh.make_reduce_post(vfn, identity)
+        kind = ("reduceByKey", fn_token(fn), _static_token(identity))
+        return self._sorted(sig, b, lambda r: r["key"], True, post, kind)
+
+    def group_by_key(self, sig, b: Block, group_capacity: int) -> Block:
+        post = sh.make_group_post(group_capacity)
+        kind = ("groupByKey", group_capacity)
+        return self._sorted(sig, b, lambda r: r["key"], True, post, kind)
+
+    # ------------------------------------------------------------------
+    # hash-routed wide ops (partitionBy)
+    # ------------------------------------------------------------------
+    def partition_by(self, sig, b: Block, key_fn) -> Block:
+        rows = b.capacity
+        n_local = rows // max(self.p, 1)
+        data, valid = self._adaptive(
+            sig, rows, n_local, lambda C: self._run_hash_stage(C, b, key_fn))
+        return Block(data, valid)
+
+    def _run_hash_stage(self, C, b, key_fn):
+        key = (("partitionBy",), C, fn_token(key_fn), _block_aval(b))
+        ctx = self.ctx
+
+        def builder():
+            def run(data, valid):
+                keys = jax.vmap(key_fn)(data)
+                return sh.hash_stage(ctx, keys, valid, data, C)
+
+            return run
+
+        fn = self._plan(key, builder)
+        self._account(b, C)
+        return fn(b.data, b.valid)
+
+    # ------------------------------------------------------------------
+    # join (both-side exchange + bounded-fan-out merge, one stage)
+    # ------------------------------------------------------------------
+    def join(self, sig, lb: Block, rb: Block, max_matches: int) -> Block:
+        p = self.p
+        nl, nr = lb.capacity, rb.capacity
+        nl_local, nr_local = nl // max(p, 1), nr // max(p, 1)
+        factor = self._factor(sig, (nl, nr))
+        M = self._fanout.get((sig, nl, nr), max_matches)
+        ctx = self.ctx
+        attempts = 0
+        while True:
+            attempts += 1
+            Cl = sh.capacity_for(factor, nl_local, p)
+            Cr = sh.capacity_for(factor, nr_local, p)
+            key = (("join", M), Cl, Cr, _block_aval(lb), _block_aval(rb))
+
+            def builder(Cl=Cl, Cr=Cr, M=M):
+                def run(ld, lv, rd, rv):
+                    return sh.join_stage(ctx, ld["key"], lv, ld["value"],
+                                         rd["key"], rv, rd["value"], Cl, Cr, M)
+
+                return run
+
+            fn = self._plan(key, builder)
+            if p > 1:
+                self._account(lb, Cl)
+                self._account(rb, Cr)
+            rows, ok, eovf, lfill, rfill, fovf = fn(lb.data, lb.valid, rb.data, rb.valid)
+            # one deferred check covers both exchanges AND the fan-out bound
+            self.stats["overflow_checks"] += 1
+            n_e, n_lf, n_rf, n_f = (int(x) for x in jax.device_get(
+                (eovf, lfill, rfill, fovf)))
+            if n_e == 0 and n_f == 0:
+                break
+            if attempts >= self.MAX_ATTEMPTS:
+                # never silently truncate (and never remember the failing
+                # bounds): overflow is detected, not swallowed — DESIGN.md §1
+                raise RuntimeError(
+                    f"join overflow unresolved after {attempts} attempts "
+                    f"(exchange_overflow={n_e}, fanout_overflow={n_f}, M={M}): "
+                    f"raise max_matches / ignis.join.max.matches for this key skew")
+            if n_e > 0:
+                self.stats["overflow_retries"] += 1
+                factor = max(self._fit(n_lf, nl_local), self._fit(n_rf, nr_local))
+            else:
+                self.stats["fanout_retries"] += 1
+                M *= 2
+        self._remember(sig, (nl, nr), factor)
+        self._fanout[(sig, nl, nr)] = M
+        while len(self._fanout) > self.MEMORY_ENTRIES:
+            self._fanout.popitem(last=False)
+        return Block(rows, ok)
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def annotate(self, node) -> str:
+        """Per-node suffix for DagEngine.explain — shuffle capacity state."""
+        sig = getattr(node, "shuffle_sig", None)
+        if sig is None:
+            return ""
+        factors = [f for (s, _), f in self._capacity.items() if s == sig]
+        if factors:
+            return f" {{shuffle: capacity_factor={factors[-1]:.2f} (memory)}}"
+        return f" {{shuffle: capacity_factor={self.default_factor:.2f} (cold)}}"
+
+    def summary(self) -> str:
+        s = self.stats
+        return (
+            "== shuffle ==\n"
+            f"exchanges={s['exchanges']} overflow_retries={s['overflow_retries']} "
+            f"fanout_retries={s['fanout_retries']} overflow_checks={s['overflow_checks']}\n"
+            f"capacity_memory: hits={s['capacity_memory_hits']} "
+            f"misses={s['capacity_memory_misses']} entries={len(self._capacity)}\n"
+            f"wide plans: compiled={s['wide_plan_misses']} hits={s['wide_plan_hits']} "
+            f"evictions={s['wide_plan_evictions']} bytes_moved={s['bytes_moved']}"
+        )

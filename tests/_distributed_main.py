@@ -55,6 +55,51 @@ def main():
                    if a % 8 == b % 8)
     check("distributed_join", got_j == exp_j)
 
+    # ---- adaptive shuffle engine: overflow retry + capacity memory --------
+    # (DESIGN.md §6) a deliberately tiny capacity factor forces every
+    # exchange bucket to overflow; results must still match the oracle and
+    # the capacity memory must remove the retry on the second run.
+    wt = IWorker(
+        ICluster(IProperties({"ignis.executor.instances": "8",
+                              "ignis.shuffle.capacity.factor": "0.05"})),
+        "python")
+    vals_t = rng.integers(0, 1000, 1024).astype(np.int32)
+    frame = wt.parallelize(vals_t).sort()
+    got_t = [int(x) for x in frame.collect()]
+    check("overflow_sort_correct", got_t == sorted(int(v) for v in vals_t))
+    st1 = wt.shuffle_stats()
+    check("overflow_sort_retried", st1["overflow_retries"] >= 1)
+    got_t2 = [int(x) for x in frame.collect()]
+    st2 = wt.shuffle_stats()
+    check("overflow_sort_stable", got_t2 == got_t)
+    check("capacity_memory_no_second_retry",
+          st2["overflow_retries"] == st1["overflow_retries"]
+          and st2["wide_plan_misses"] == st1["wide_plan_misses"]
+          and st2["capacity_memory_hits"] > st1["capacity_memory_hits"])
+
+    # hash-exchange overflow (partitionBy with 5-key skew at p=8, C≈1)
+    pb = wt.parallelize(vals_t).map(
+        lambda x: {"key": x % 5, "value": x}).partition_by()
+    vals_back = sorted(int(np.asarray(r["value"])) for r in pb.collect())
+    check("overflow_hash_rows_preserved",
+          vals_back == sorted(int(v) for v in vals_t))
+    st3 = wt.shuffle_stats()
+    check("overflow_hash_retried", st3["overflow_retries"] > st2["overflow_retries"])
+
+    # join under tiny capacity: exchange retry, then fan-out retry, oracle match
+    lt = wt.parallelize(np.arange(256, dtype=np.int32)).map(
+        lambda x: {"key": x % 4, "value": x})
+    rt = wt.parallelize(np.arange(64, dtype=np.int32)).map(
+        lambda x: {"key": x % 4, "value": x * 2})
+    got_tj = sorted((int(np.asarray(x["key"])), int(np.asarray(x["value"][0])),
+                     int(np.asarray(x["value"][1])))
+                    for x in lt.join(rt, max_matches=2).collect())
+    exp_tj = sorted((a % 4, a, b * 2) for a in range(256) for b in range(64)
+                    if a % 4 == b % 4)
+    check("overflow_join_correct", got_tj == exp_tj)
+    check("overflow_join_fanout_retried", wt.shuffle_stats()["fanout_retries"] >= 1)
+    check("bytes_moved_recorded", wt.shuffle_stats()["bytes_moved"] > 0)
+
     # ---- comm layer (MPI analogue) -----------------------------------------
     ctx = w.context
     x = comm.shard_rows(ctx, jnp.arange(16, dtype=jnp.float32))

@@ -1,0 +1,270 @@
+"""Adaptive shuffle engine (DESIGN.md §6): capacity memory, fused wide
+stages, deferred overflow checks, join fan-out retry/memory, telemetry —
+plus the max/min argselect regression (ISSUE 2 satellite).
+
+Exchange-capacity overflow needs p > 1 and is covered in the 8-device
+subprocess suite (tests/_distributed_main.py); here we cover everything
+observable at p = 1, including join fan-out overflow (which is p-independent).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ICluster, IProperties, IWorker
+
+
+@pytest.fixture
+def worker():
+    return IWorker(ICluster(IProperties()), "python")
+
+
+# ---------------------------------------------------------------------------
+# capacity memory + wide-plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_second_action_hits_memory_and_never_recompiles(worker):
+    vals = np.random.default_rng(0).integers(0, 500, 96).astype(np.int32)
+    srt = worker.parallelize(vals).sort()
+    assert [int(x) for x in srt.collect()] == sorted(int(v) for v in vals)
+    s1 = worker.shuffle_stats()
+    assert s1["capacity_memory_misses"] >= 1
+    assert s1["wide_plan_misses"] >= 1
+    assert [int(x) for x in srt.collect()] == sorted(int(v) for v in vals)
+    s2 = worker.shuffle_stats()
+    assert s2["capacity_memory_hits"] > s1["capacity_memory_hits"]
+    assert s2["wide_plan_misses"] == s1["wide_plan_misses"]  # zero recompiles
+    assert s2["wide_plan_hits"] > s1["wide_plan_hits"]
+    assert s2["overflow_retries"] == 0
+
+
+def test_capacity_memory_survives_lineage_rebuild(worker):
+    """Structural signatures: re-building an identical pipeline (fresh lambda
+    objects, same code) maps to the same capacity-memory slot and compiled
+    wide plan — the benchmark-loop / iterative-driver case."""
+
+    def run():
+        return (
+            worker.parallelize(np.arange(64, dtype=np.int32))
+            .map(lambda x: x % 7)
+            .sort()
+            .count()
+        )
+
+    assert run() == 64
+    s1 = worker.shuffle_stats()
+    assert run() == 64
+    s2 = worker.shuffle_stats()
+    assert s2["capacity_memory_hits"] > s1["capacity_memory_hits"]
+    assert s2["wide_plan_misses"] == s1["wide_plan_misses"]
+
+
+def test_fused_wide_stage_reduce_by_key_reuses_plan(worker):
+    kv = worker.parallelize(np.arange(60, dtype=np.int32)).map(
+        lambda x: {"key": x % 7, "value": x})
+    red = kv.reduce_by_key(lambda a, b: a + b)
+    exp = {k: sum(x for x in range(60) if x % 7 == k) for k in range(7)}
+    got = {int(np.asarray(r["key"])): int(np.asarray(r["value"]))
+           for r in red.collect()}
+    assert got == exp
+    m1 = worker.shuffle_stats()["wide_plan_misses"]
+    got2 = {int(np.asarray(r["key"])): int(np.asarray(r["value"]))
+            for r in red.collect()}
+    assert got2 == exp
+    s = worker.shuffle_stats()
+    assert s["wide_plan_misses"] == m1
+    assert s["wide_plan_hits"] >= 1
+
+
+def test_partition_by_preserves_rows(worker):
+    kv = worker.parallelize(np.arange(32, dtype=np.int32)).map(
+        lambda x: {"key": x % 4, "value": x})
+    for pb in (kv.partition_by(), kv.partition_by(lambda r: r["key"])):
+        vals = sorted(int(np.asarray(r["value"])) for r in pb.collect())
+        assert vals == list(range(32))
+
+
+# ---------------------------------------------------------------------------
+# join fan-out overflow: retry + fan-out memory (p-independent)
+# ---------------------------------------------------------------------------
+
+
+def test_join_fanout_overflow_retries_then_remembers(worker):
+    # one hot key with 8 matches per row against max_matches=1: the fan-out
+    # bound must double 1→2→4→8 (3 retries), results exactly the oracle
+    L = worker.parallelize(np.arange(8, dtype=np.int32)).map(
+        lambda x: {"key": x * 0, "value": x})
+    R = worker.parallelize(np.arange(8, dtype=np.int32)).map(
+        lambda x: {"key": x * 0, "value": x + 100})
+    j = L.join(R, max_matches=1)
+    got = sorted((int(np.asarray(r["value"][0])), int(np.asarray(r["value"][1])))
+                 for r in j.collect())
+    assert got == sorted((a, b + 100) for a in range(8) for b in range(8))
+    s1 = worker.shuffle_stats()
+    assert s1["fanout_retries"] >= 3
+    # second run: fan-out memory starts at the fitted bound — no new retries
+    assert len(j.collect()) == 64
+    s2 = worker.shuffle_stats()
+    assert s2["fanout_retries"] == s1["fanout_retries"]
+    assert s2["wide_plan_misses"] == s1["wide_plan_misses"]
+
+
+# ---------------------------------------------------------------------------
+# telemetry surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_shuffle_stats_keys_and_explain_annotations(worker):
+    srt = worker.parallelize(np.arange(16, dtype=np.int32)).map(
+        lambda x: x * 3).sort_by(lambda x: x)
+    srt.count()
+    stats = worker.shuffle_stats()
+    for k in ("exchanges", "overflow_retries", "fanout_retries",
+              "overflow_checks", "capacity_memory_hits",
+              "capacity_memory_misses", "wide_plan_hits", "wide_plan_misses",
+              "bytes_moved"):
+        assert k in stats, k
+    out = srt.explain()
+    assert "== shuffle ==" in out
+    assert "capacity_factor=" in out and "(memory)" in out
+    assert "capacity_memory:" in out and "wide plans:" in out
+    assert worker.explain(srt) == out
+
+
+def test_cold_wide_node_annotated_cold(worker):
+    srt = worker.parallelize(np.arange(8, dtype=np.int32)).sort()
+    assert "(cold)" in srt.explain()  # never evaluated → no memory entry
+
+
+# ---------------------------------------------------------------------------
+# max/min with key_fn (ISSUE 2 satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_max_min_without_key_fn_elementwise(worker):
+    df = worker.parallelize(np.array([3, 9, 1, 7], np.int32))
+    assert int(df.max()) == 9
+    assert int(df.min()) == 1
+    dff = worker.parallelize(np.array([3.5, -2.25, 7.75], np.float32))
+    assert float(dff.max()) == 7.75
+    assert float(dff.min()) == -2.25
+
+
+def test_max_min_key_fn_returns_arg_row(worker):
+    df = worker.parallelize(np.array([3, 9, 1, 7], np.int32))
+    # key_fn no longer ignored: negated key flips the winner
+    assert int(df.max(lambda x: -x)) == 1
+    assert int(df.min(lambda x: -x)) == 9
+    kv = worker.parallelize(np.arange(60, dtype=np.int32)).map(
+        lambda x: {"key": x % 7, "value": x})
+    top = kv.max(lambda r: r["value"])
+    assert (int(top["key"]), int(top["value"])) == (59 % 7, 59)
+    bot = kv.min(lambda r: r["value"])
+    assert (int(bot["key"]), int(bot["value"])) == (0, 0)
+
+
+def test_max_min_key_fn_respects_validity_mask(worker):
+    df = worker.parallelize(np.arange(10, dtype=np.int32)).filter(
+        lambda x: x < 5)
+    assert int(df.max(lambda x: x)) == 4  # masked rows 5..9 never win
+    assert int(df.min(lambda x: -x)) == 4
+
+
+def test_max_min_key_fn_empty_raises(worker):
+    empty = worker.parallelize(np.arange(4, dtype=np.int32)).filter(
+        lambda x: x < 0)
+    with pytest.raises(ValueError):
+        empty.max(lambda x: x)
+    with pytest.raises(ValueError):
+        empty.min(lambda x: x)
+
+
+def test_fn_tokens_do_not_collide_across_instances_or_dtypes(worker):
+    """Bound methods carry behavior in __self__, and 1 == 1.0 == True in
+    Python but not in XLA: neither may share a compiled wide plan."""
+    from repro.core.shuffle_plan import fn_token
+
+    class Scaler:
+        def __init__(self, k):
+            self.k = k
+
+        def key(self, r):
+            return r * self.k
+
+    assert fn_token(Scaler(1).key) != fn_token(Scaler(-1).key)
+
+    def mk(a):
+        return lambda x: x * a
+
+    assert fn_token(mk(1)) != fn_token(mk(1.0))
+    assert fn_token(mk(1)) != fn_token(mk(True))
+    assert fn_token(mk(2)) == fn_token(mk(2))  # rebuilds still match
+
+    vals = np.array([3, 9, 1, 7], np.int32)
+    up = [int(x) for x in worker.parallelize(vals).sort_by(Scaler(1).key).collect()]
+    dn = [int(x) for x in worker.parallelize(vals).sort_by(Scaler(-1).key).collect()]
+    assert up == [1, 3, 7, 9]
+    assert dn == [9, 7, 3, 1]
+
+
+def test_fn_token_tracks_referenced_globals(worker):
+    """A rebuilt lambda whose referenced module global changed must NOT
+    reuse the plan compiled against the old value."""
+    import sys
+    import types
+
+    from repro.core.shuffle_plan import fn_token
+
+    mod = types.ModuleType("shuffle_token_probe")
+    sys.modules["shuffle_token_probe"] = mod
+    exec("SCALE = 3\ndef make():\n    return lambda x: x * SCALE\n", mod.__dict__)
+    t1 = fn_token(mod.make())
+    mod.SCALE = 5
+    assert fn_token(mod.make()) != t1
+    mod.SCALE = 3
+    assert fn_token(mod.make()) == t1  # restored value matches again
+
+    # end to end: second build after the global changed computes fresh
+    d = np.arange(6, dtype=np.int32)
+    mod.SCALE = 3
+    out1 = sorted(int(x) for x in
+                  worker.parallelize(d).map(mod.make()).map(lambda x: x + 0).collect())
+    assert out1 == [0, 3, 6, 9, 12, 15]
+    mod.SCALE = 5
+    out2 = sorted(int(x) for x in
+                  worker.parallelize(d).map(mod.make()).map(lambda x: x + 0).collect())
+    assert out2 == [0, 5, 10, 15, 20, 25]
+    del sys.modules["shuffle_token_probe"]
+
+
+def test_static_token_fingerprints_large_arrays():
+    """repr() truncates big arrays; identity tokens must hash the bytes."""
+    from repro.core.shuffle_plan import _static_token
+
+    a = np.zeros(2000)
+    b = np.zeros(2000)
+    b[1000] = 7.0
+    assert _static_token(a) != _static_token(b)
+    assert _static_token(np.zeros(2000)) == _static_token(np.zeros(2000))
+
+
+def test_join_unresolvable_fanout_raises_not_truncates(worker):
+    """A key too skewed for MAX_ATTEMPTS doublings must raise — overflow is
+    detected, never silently dropped (DESIGN.md §1)."""
+    L = worker.parallelize(np.arange(1, dtype=np.int32)).map(
+        lambda x: {"key": x * 0, "value": x})
+    R = worker.parallelize(np.arange(600, dtype=np.int32)).map(
+        lambda x: {"key": x * 0, "value": x})
+    with pytest.raises(RuntimeError, match="max_matches"):
+        L.join(R, max_matches=2).collect()
+    assert len(L.join(R, max_matches=600).collect()) == 600
+
+
+def test_spark_mode_shuffle_parity(worker):
+    """The manager runs identically under the spark pipe — only slower."""
+    ws = IWorker(ICluster(IProperties({"ignis.mode": "spark"})), "python")
+    data = np.random.default_rng(3).integers(0, 99, 40).astype(np.int32)
+    outs = []
+    for w in (worker, ws):
+        outs.append([int(x) for x in w.parallelize(data).sort().collect()])
+    assert outs[0] == outs[1] == sorted(int(v) for v in data)
