@@ -7,6 +7,7 @@
   Fig 17     bench_pagerank    join/reduceByKey graph pattern
   Fig 18     bench_tc          join/union/distinct fixed point
   Fig 19-22  bench_hpc_native  native SPMD apps via worker.call (overhead %)
+  §3.2/Fig 2 bench_hybrid      one IJob: native + MapReduce branches overlap
   Table 5    bench_sloc        integration SLOC
   (ours)     roofline          §Roofline summary from the dry-run artifacts
 
@@ -32,6 +33,7 @@ SMOKE_KWARGS = {
     "pagerank": {"n_vertices": 24, "n_edges": 60, "iters": 2},
     "kmeans": {},
     "minebench": {},
+    "hybrid": {"n": 1 << 14, "cg_iters": 100, "iters": 2},
 }
 
 BENCHES = [
@@ -42,6 +44,7 @@ BENCHES = [
     ("pagerank", "benchmarks.bench_pagerank"),
     ("tc", "benchmarks.bench_tc"),
     ("hpc_native", "benchmarks.bench_hpc_native"),
+    ("hybrid", "benchmarks.bench_hybrid"),
     ("sloc", "benchmarks.bench_sloc"),
     ("roofline", "benchmarks.roofline"),
 ]

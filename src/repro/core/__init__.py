@@ -9,8 +9,10 @@ models:
     communicator (mesh + axis) exactly like IgnisHPC hands MPI apps
     ``IGNIS_COMM_WORLD``
 
-plus the lazy task-dependency graph with lineage-based fault tolerance and
-the driver-round-trip "spark mode" baseline the paper compares against.
+plus the lazy task-dependency graph with lineage-based fault tolerance,
+the job-oriented driver layer (``IJob``/``IFuture``: every action submits
+into a cross-worker job DAG; eager actions are facades — docs/driver.md),
+and the driver-round-trip "spark mode" baseline the paper compares against.
 """
 from repro.core.properties import IProperties  # noqa: F401
 from repro.core.cluster import Ignis, ICluster, IWorker  # noqa: F401
@@ -18,3 +20,4 @@ from repro.core.dataframe import IDataFrame  # noqa: F401
 from repro.core.context import IContext  # noqa: F401
 from repro.core.textlambda import ISource, text_lambda  # noqa: F401
 from repro.core.native import ignis_export  # noqa: F401
+from repro.core.job import IFuture, IJob, JobScheduler  # noqa: F401

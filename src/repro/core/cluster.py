@@ -11,6 +11,7 @@ serialize→host→deserialize pipe the paper benchmarks against.
 from __future__ import annotations
 
 import pickle
+import threading
 from typing import Optional
 
 import jax
@@ -18,11 +19,11 @@ import numpy as np
 
 from repro.core import compat
 from repro.core.context import IContext
-from repro.core.dag import DagEngine, TaskNode
+from repro.core.dag import DagEngine, TaskNode, node_sig
 from repro.core.shuffle_plan import ShuffleManager
 from repro.core.dataframe import IDataFrame
 from repro.core.native import get_app, load_library
-from repro.core.partition import Block, block_aval, from_host
+from repro.core.partition import Block, block_aval, concat_blocks, from_host
 from repro.core.properties import IProperties
 from repro.core.textlambda import ISource
 
@@ -43,6 +44,21 @@ class Ignis:
     @classmethod
     def running(cls) -> bool:
         return cls._started
+
+    @classmethod
+    def scheduler(cls):
+        """The process-wide job scheduler (docs/driver.md)."""
+        from repro.core.job import default_scheduler
+
+        return default_scheduler()
+
+    @classmethod
+    def job(cls, name: str = "job"):
+        """Open a named job: a group of async submissions scheduled as one
+        cross-worker DAG (paper §3.2 job hierarchy; docs/driver.md)."""
+        from repro.core.job import IJob
+
+        return IJob(name)
 
 
 class ICluster:
@@ -104,6 +120,11 @@ class IWorker:
             headroom=cluster.props.get_float("ignis.shuffle.memory.headroom", 1.25),
         )
         self._libraries: list[str] = []
+        # job-scheduler serialisation point: a worker's engine is single-
+        # threaded; the scheduler overlaps tasks across workers, never within
+        # one (core/job.py). Re-entrant so nested eager actions inside a
+        # running native task execute inline.
+        self._job_lock = threading.RLock()
         cluster.workers.append(self)
 
     # ------------------------------------------------------------------
@@ -226,50 +247,122 @@ class IWorker:
 
     loadLibrary = load_library
 
-    def _call_ctx(self, params: dict) -> IContext:
-        ctx = self.context.child()
-        for k, v in params.items():
-            ctx.set_var(k, v)
-        return ctx
-
-    def void_call(self, fn_name, df: IDataFrame | None = None, **params):
-        """Run a native app for effect (paper's voidCall)."""
-        src = fn_name.fn if isinstance(fn_name, ISource) else fn_name
+    def _resolve_app(self, fn_name, params):
+        """Resolve (app callable, display name, merged params, sig token)
+        from a registry name, a callable, or an ISource with addParams."""
         if isinstance(fn_name, ISource):
-            params = {**fn_name.params, **params}
+            src, params = fn_name.fn, {**fn_name.params, **params}
+        else:
+            src = fn_name
         app = get_app(src) if isinstance(src, str) else src
-        ctx = self._call_ctx(params)
-        args = ()
-        if df is not None:
-            b = df._merged()
-            args = (b.data, b.valid)
-        return app(ctx, *args)
+        name = src if isinstance(src, str) else getattr(src, "__name__", "app")
+        isrc = ISource(src)
+        isrc.params = dict(params)
+        return app, name, params, isrc.token()
 
-    def call(self, fn_name, df: IDataFrame | None = None, **params) -> IDataFrame:
-        """Run a native app returning rows → IDataFrame (paper's call)."""
-        src = fn_name.fn if isinstance(fn_name, ISource) else fn_name
-        if isinstance(fn_name, ISource):
-            params = {**fn_name.params, **params}
-        app = get_app(src) if isinstance(src, str) else src
-        ctx = self._call_ctx(params)
+    @staticmethod
+    def _native_args(parent_results):
+        if not parent_results:
+            return ()
+        b = concat_blocks(parent_results[0])
+        return (b.data, b.valid)
+
+    def void_call_async(self, fn_name, df: IDataFrame | None = None, job=None,
+                        **params):
+        """Async voidCall: the app runs as a native TaskNode inside the job
+        DAG — it appears in job explain()/stats, executes under the worker's
+        job lock, and gets the same scheduling/fault path as ``call`` instead
+        of firing eagerly outside the graph. Returns an IFuture resolving to
+        the app's return value.
+
+        ``job`` is reserved for the IJob here; an app parameter literally
+        named "job" must go through ``ISource.add_param`` (the eager
+        ``void_call`` keeps the unrestricted param namespace)."""
+        return self._void_call_task(fn_name, df, params, job)
+
+    def _void_call_task(self, fn_name, df, params: dict, job):
+        app, name, params, tok = self._resolve_app(fn_name, params)
         parents = [df.node] if df is not None else []
+        worker = self
+        out_cell: dict = {}
 
         def fn(parent_results):
-            args = ()
-            if parent_results:
-                from repro.core.partition import concat_blocks
+            ctx = worker.context.bind(params)  # execution-time binding
+            out_cell["value"] = app(ctx, *worker._native_args(parent_results))
+            return []  # void: no blocks enter the lineage
 
-                b = concat_blocks(parent_results[0])
-                args = (b.data, b.valid)
-            out = app(ctx, *args)
+        node = TaskNode(f"voidCall:{name}", parents, fn=fn, narrow=False)
+        node.task_kind = "native"
+        node.owner = self
+        node.sig = ("native", "voidCall", tok, *(node_sig(p) for p in parents))
+        frame = IDataFrame(self, node)
+
+        def task_fn(memo):
+            worker.engine.evaluate(node, memo=memo)
+            return out_cell.get("value")
+
+        return frame._submit("voidCall", task_fn=task_fn, job=job)
+
+    def void_call(self, fn_name, df: IDataFrame | None = None, **params):
+        """Run a native app for effect (paper's voidCall) — facade over the
+        async path. Params pass through verbatim (an app param named "job"
+        reaches the app's context; only the async variant reserves it)."""
+        return self._void_call_task(fn_name, df, params, None).result()
+
+    def call(self, fn_name, df: IDataFrame | None = None, **params) -> IDataFrame:
+        """Run a native app returning rows → IDataFrame (paper's call).
+
+        The node is a first-class lineage citizen: the child IContext is
+        bound when the task EXECUTES (late ``set_var`` updates are visible),
+        and the (app, params) token is part of ``node.sig`` so downstream
+        plan/capacity caches key on the actual call."""
+        app, name, params, tok = self._resolve_app(fn_name, params)
+        parents = [df.node] if df is not None else []
+        worker = self
+
+        def fn(parent_results):
+            ctx = worker.context.bind(params)  # execution-time binding
+            out = app(ctx, *worker._native_args(parent_results))
             if isinstance(out, Block):
                 return [out]
             data, valid = out
             return [Block(data, valid)]
 
-        return IDataFrame(self, TaskNode(f"call:{src}", parents, fn=fn, narrow=False))
+        node = TaskNode(f"call:{name}", parents, fn=fn, narrow=False)
+        node.task_kind = "native"
+        node.owner = self
+        node.sig = ("native", "call", tok, *(node_sig(p) for p in parents))
+        return IDataFrame(self, node)
+
+    def call_partitions(self, fn_name, df: IDataFrame, **params) -> IDataFrame:
+        """Partition-preserving native call: the app runs once per block
+        with the worker communicator — no ``_merged()`` collapse. The node
+        is narrow with block-wise lineage, so it composes with caching,
+        stage boundaries, and ``kill_block`` repair (only the lost block
+        re-runs the app)."""
+        app, name, params, tok = self._resolve_app(fn_name, params)
+        worker = self
+
+        def block_fn(parent_blocks):
+            ctx = worker.context.bind(params)  # execution-time binding
+            b = parent_blocks[0]
+            out = app(ctx, b.data, b.valid)
+            if isinstance(out, Block):
+                return out
+            data, valid = out
+            return Block(data, valid)
+
+        node = TaskNode(
+            f"callPartitions:{name}", [df.node], block_fn=block_fn, narrow=True
+        )
+        node.task_kind = "native"
+        node.owner = self
+        node.sig = ("native", "callPartitions", tok, node_sig(df.node))
+        return IDataFrame(self, node)
 
     voidCall = void_call
+    voidCallAsync = void_call_async
+    callPartitions = call_partitions
 
     # ------------------------------------------------------------------
     # spark-mode pipe simulation (paper §2.1: system pipes outside the JVM)

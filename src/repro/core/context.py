@@ -58,3 +58,11 @@ class IContext:
         c = IContext(self.mesh, self.axis, self.props, self.worker)
         c._vars = {**self._vars, **extra_vars}
         return c
+
+    def bind(self, params: dict) -> "IContext":
+        """Execution-time context for a native task: a child communicator
+        carrying the driver's *current* vars plus the call's params (paper
+        Fig. 11 ``addParam``). Native call nodes invoke this when the task
+        RUNS, not when it was defined, so ``set_var`` updates between
+        definition and execution are visible (docs/driver.md)."""
+        return self.child(**params)

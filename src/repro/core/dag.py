@@ -52,6 +52,13 @@ class TaskNode:
     # annotate the node with its capacity state.
     sig: Optional[tuple] = None
     shuffle_sig: Optional[tuple] = None
+    # job-scheduler routing (core/job.py): the IWorker whose engine owns this
+    # node, and the task class it maps to in a job DAG ("dataflow" | "native").
+    # Owner is stamped by the driver layer (IDataFrame / worker.call) — an
+    # edge whose endpoints have different owners is a cross-worker task
+    # boundary; native nodes are always their own job task.
+    owner: Optional[object] = None
+    task_kind: str = "dataflow"
     id: int = field(default_factory=lambda: next(_ids))
     # runtime state
     result: Optional[list] = None  # list[Block] when materialised
@@ -120,6 +127,7 @@ class DagEngine:
             "plan_cache_hits": 0,
             "plan_cache_misses": 0,
             "plan_cache_evictions": 0,
+            "iter_block_computes": 0,
         }
 
     # ---- planner (stage compilation) ----------------------------------------
@@ -204,6 +212,8 @@ class DagEngine:
             t = []
             if not n.narrow:
                 t.append("wide")
+            if n.task_kind == "native":
+                t.append("native")
             if n.cached:
                 t.append("cached")
             if n.result is not None:
@@ -267,6 +277,63 @@ class DagEngine:
     def evaluate(self, node: TaskNode, memo: dict | None = None):
         memo = {} if memo is None else memo
         return self._eval(node, memo, self.plan(node))
+
+    def evaluate_blocks_iter(self, node: TaskNode, memo: dict | None = None,
+                             plans: dict | None = None):
+        """Yield the node's blocks one at a time, pulling narrow chains
+        lazily — early-exit actions (``take``) stop computing the moment
+        they have enough rows instead of materialising every block. Fused
+        stages stay fused: a stage tail yields one compiled dispatch per
+        parent block through the same plan cache as full evaluation.
+
+        Cached nodes and wide/opaque nodes fall back to full evaluation
+        (their granularity is not incremental, and partial results must
+        never be written into a ``cache()`` slot)."""
+        from repro.core.partition import Block
+
+        memo = {} if memo is None else memo
+        plans = self.plan(node) if plans is None else plans
+        if node.result is not None and not self._has_holes(node):
+            yield from node.result
+            return
+        if node in memo:
+            yield from memo[node]
+            return
+        stage = plans.get(node)
+        if stage is not None and not node.cached:
+            out = []
+            for pb in self.evaluate_blocks_iter(stage.head.parents[0], memo, plans):
+                self.stats["iter_block_computes"] += 1
+                data, valid = self._compiled(stage, pb)(pb.data, pb.valid)
+                b = Block(data, valid)
+                out.append(b)
+                yield b
+            for n in stage.nodes:  # telemetry parity with _compute_stage
+                n.compute_count += 1
+            self.stats["fused_stages"] += 1
+            self.stats["fused_ops"] += len(stage.nodes)
+            memo[node] = out
+            return
+        if (
+            node.narrow
+            and node.block_fn is not None
+            and node.parents
+            and not node.cached
+        ):
+            iters = [self.evaluate_blocks_iter(p, memo, plans) for p in node.parents]
+            out = []
+            for parents_i in zip(*iters):
+                self.stats["iter_block_computes"] += 1
+                b = node.block_fn(list(parents_i))
+                out.append(b)
+                yield b
+            # fully consumed ⇒ the node is materialised: record it in the
+            # (possibly job-shared) memo so later tasks reuse instead of
+            # recomputing; an abandoned (early-exit) iterator writes nothing
+            node.compute_count += 1
+            memo[node] = out
+            return
+        yield from self._eval(node, memo, plans)
 
     def _eval(self, node: TaskNode, memo: dict, plans: dict | None = None):
         plans = {} if plans is None else plans

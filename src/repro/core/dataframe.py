@@ -50,6 +50,10 @@ class IDataFrame:
     def __init__(self, worker, node: TaskNode):
         self.worker = worker
         self.node = node
+        if node.owner is None:
+            # job-scheduler routing (core/job.py): edges between differently-
+            # owned nodes are cross-worker task boundaries
+            node.owner = worker
 
     # ------------------------------------------------------------------
     # plumbing
@@ -180,11 +184,19 @@ class IDataFrame:
         rng = random.Random(seed)
         return rng.sample(rows, min(n, len(rows)))
 
+    def foreach_async(self, fn, job=None):
+        fn = resolve(fn)
+
+        def act(blocks):
+            for b in blocks:
+                for row in to_host(b):
+                    fn(row)
+
+        return self._submit("foreach", act, job=job)
+
     def foreach(self, fn):
         """Action: apply a host-side fn to every valid row (paper's Void fns)."""
-        fn = resolve(fn)
-        for row in self.collect():
-            fn(row)
+        return self.foreach_async(fn).result()
 
     sampleByKey = sample_by_key
     takeSample = take_sample
@@ -355,50 +367,93 @@ class IDataFrame:
         return plan + ("\n" + mgr.summary() if mgr else "")
 
     # ------------------------------------------------------------------
-    # actions
+    # actions — lazy job submission + eager facades
+    #
+    # Every action has an ``*_async`` twin returning an ``IFuture``: the
+    # lineage is handed to the job scheduler (core/job.py), which cuts it
+    # into per-worker tasks (native calls and importData reshards become
+    # their own task nodes) and overlaps independent branches. The eager
+    # form is a thin facade: ``df.count()`` IS ``df.count_async().result()``
+    # (docs/driver.md). Pass ``job=`` to group many submissions — possibly
+    # across workers and frames — into one scheduled job DAG.
     # ------------------------------------------------------------------
+    def _submit(self, name: str, blocks_fn=None, task_fn=None, job=None):
+        from repro.core.job import IJob
+
+        if job is None:
+            job = IJob(f"{name}@{self.worker.name}")
+        return job.submit_action(self, name, blocks_fn=blocks_fn, task_fn=task_fn)
+
+    def count_async(self, job=None):
+        def act(blocks):
+            total = 0
+            for b in blocks:
+                total += int(jax.device_get(ex.count_block(b)))
+            return total
+
+        return self._submit("count", act, job=job)
+
     def count(self) -> int:
-        total = 0
-        for b in self._blocks():
-            total += int(jax.device_get(ex.count_block(b)))
-        return total
+        return self.count_async().result()
+
+    def reduce_async(self, fn, identity=0, job=None):
+        fn = resolve(fn)
+
+        def act(blocks):
+            b = concat_blocks(blocks)
+            vfn = lambda a, c: jax.tree.map(fn, a, c)  # noqa: E731
+            return jax.device_get(ex.pairwise_reduce(b.data, b.valid, vfn, identity))
+
+        return self._submit("reduce", act, job=job)
 
     def reduce(self, fn, identity=0):
-        fn = resolve(fn)
-        b = self._merged()
-        vfn = lambda a, c: jax.tree.map(fn, a, c)
-        out = ex.pairwise_reduce(b.data, b.valid, vfn, identity)
-        return jax.device_get(out)
+        return self.reduce_async(fn, identity).result()
 
     tree_reduce = reduce
     treeReduce = reduce
 
-    def aggregate(self, zero, seq_fn, comb_fn):
+    def aggregate_async(self, zero, seq_fn, comb_fn, job=None):
         seq_fn, comb_fn = resolve(seq_fn), resolve(comb_fn)
-        return self.map(lambda r: seq_fn(zero, r)).reduce(comb_fn, zero)
+        return self.map(lambda r: seq_fn(zero, r)).reduce_async(comb_fn, zero, job=job)
+
+    def aggregate(self, zero, seq_fn, comb_fn):
+        return self.aggregate_async(zero, seq_fn, comb_fn).result()
 
     treeAggregate = aggregate
 
+    def fold_async(self, zero, fn, job=None):
+        return self.map(lambda r: r).reduce_async(fn, zero, job=job)
+
     def fold(self, zero, fn):
-        return self.map(lambda r: r).reduce(fn, zero)
+        return self.fold_async(zero, fn).result()
+
+    def max_async(self, key_fn=None, job=None):
+        return self._submit(
+            "max", lambda blocks: self._extreme_of(blocks, key_fn, True), job=job
+        )
 
     def max(self, key_fn=None):
         """Without key_fn: elementwise tree-max of valid rows. With key_fn:
         the ROW maximising key_fn(row) (Spark's max(key=...) — argmax)."""
-        return self._extreme(key_fn, largest=True)
+        return self.max_async(key_fn).result()
+
+    def min_async(self, key_fn=None, job=None):
+        return self._submit(
+            "min", lambda blocks: self._extreme_of(blocks, key_fn, False), job=job
+        )
 
     def min(self, key_fn=None):
         """Without key_fn: elementwise tree-min. With key_fn: the row
         minimising key_fn(row) (argmin)."""
-        return self._extreme(key_fn, largest=False)
+        return self.min_async(key_fn).result()
 
-    def _extreme(self, key_fn, largest: bool):
-        b = self._merged()
+    def _extreme_of(self, blocks, key_fn, largest: bool):
+        b = concat_blocks(blocks)
         if key_fn is None:
             op = jnp.maximum if largest else jnp.minimum
             sent = sh._sentinel_low if largest else sh._sentinel
             ident = jax.tree.map(lambda x: sent(x.dtype), b.data)
-            vfn = lambda a, c: jax.tree.map(op, a, c)
+            vfn = lambda a, c: jax.tree.map(op, a, c)  # noqa: E731
             return jax.device_get(ex.pairwise_reduce(b.data, b.valid, vfn, ident))
         key_fn = resolve(key_fn)
         keys = jax.vmap(key_fn)(b.data)
@@ -408,35 +463,72 @@ class IDataFrame:
         if not bool(jax.device_get(b.valid[i])):
             # a valid row tying the sentinel can shadow the winner; fall back
             # to the host (also the empty-frame path)
-            rows = self.collect()
+            rows = [r for blk in blocks for r in to_host(blk)]
             if not rows:
                 raise ValueError("max()/min() with key_fn on an empty dataframe")
             pick = max if largest else min
             return pick(rows, key=lambda r: float(np.asarray(key_fn(r))))
         return jax.device_get(jax.tree.map(lambda x: x[i], b.data))
 
+    def collect_async(self, job=None):
+        def act(blocks):
+            out = []
+            for b in blocks:
+                out.extend(to_host(b))
+            return out
+
+        return self._submit("collect", act, job=job)
+
     def collect(self) -> list:
-        out = []
-        for b in self._blocks():
-            out.extend(to_host(b))
-        return out
+        return self.collect_async().result()
+
+    def take_async(self, k: int, job=None):
+        """Early-exit take: blocks materialise one at a time through the
+        engine's lazy block iterator and evaluation stops as soon as ``k``
+        valid rows exist — a 100-block lineage pays for one block when the
+        first block satisfies the request."""
+        worker, node = self.worker, self.node
+
+        def run(memo):
+            out = []
+            for b in worker.engine.evaluate_blocks_iter(node, memo=memo):
+                out.extend(to_host(b))
+                if len(out) >= k:
+                    break
+            return out[:k]
+
+        return self._submit("take", task_fn=run, job=job)
 
     def take(self, k: int) -> list:
-        return self.collect()[:k]
+        return self.take_async(k).result()
+
+    def top_async(self, k: int, key_fn=None, job=None):
+        key_fn = resolve(key_fn) if key_fn else (lambda r: r)
+        return self.sort_by(key_fn, ascending=False).take_async(k, job=job)
 
     def top(self, k: int, key_fn=None) -> list:
-        key_fn = resolve(key_fn) if key_fn else (lambda r: r)
-        return self.sort_by(key_fn, ascending=False).take(k)
+        return self.top_async(k, key_fn).result()
+
+    @staticmethod
+    def _kv_dict(blocks) -> dict:
+        rows = [r for b in blocks for r in to_host(b)]
+        return {int(np.asarray(r["key"])): int(np.asarray(r["value"])) for r in rows}
+
+    def count_by_key_async(self, job=None):
+        ones = self.map_values(lambda v: jnp.int32(1))
+        red = ones.reduce_by_key(lambda a, b: a + b, 0)
+        return red._submit("countByKey", self._kv_dict, job=job)
 
     def count_by_key(self) -> dict:
-        ones = self.map_values(lambda v: jnp.int32(1))
-        rows = ones.reduce_by_key(lambda a, b: a + b, 0).collect()
-        return {int(np.asarray(r["key"])): int(np.asarray(r["value"])) for r in rows}
+        return self.count_by_key_async().result()
+
+    def count_by_value_async(self, job=None):
+        kv = self.map(lambda r: {"key": r, "value": jnp.int32(1)})
+        red = kv.reduce_by_key(lambda a, b: a + b, 0)
+        return red._submit("countByValue", self._kv_dict, job=job)
 
     def count_by_value(self) -> dict:
-        kv = self.map(lambda r: {"key": r, "value": jnp.int32(1)})
-        rows = kv.reduce_by_key(lambda a, b: a + b, 0).collect()
-        return {int(np.asarray(r["key"])): int(np.asarray(r["value"])) for r in rows}
+        return self.count_by_value_async().result()
 
     countByKey = count_by_key
     countByValue = count_by_value

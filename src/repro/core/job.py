@@ -1,0 +1,540 @@
+"""Lazy job-oriented driver layer: IJob / IFuture / JobScheduler.
+
+The paper's job hierarchy (§3.2, Figs. 2–3) holds dataflow tasks, native
+SPMD tasks and inter-worker transfers in ONE task DAG; this module is the
+driver-side realisation. An ``IJob`` partitions a frame's lineage into
+uniform *job tasks* at cross-worker boundaries:
+
+  * a **stage** task materialises a subgraph on the worker that owns it,
+  * a **native** task runs a ``worker.call`` / ``void_call`` app node,
+  * a **reshard** task executes an ``importData`` node (the inter-worker
+    communicator, paper Fig. 4),
+  * an **action** task applies the driver-side action function to the
+    materialised blocks.
+
+Tasks execute on a shared thread pool under per-worker locks, so a worker's
+engine is never entered concurrently while *independent branches on
+different workers overlap* — the Pilot-style async-handle model (PAPERS.md:
+Luckow et al. 2015) over IgnisHPC's hierarchy. Results flow between tasks
+through the job's shared memo (the same memo ``DagEngine.evaluate`` uses),
+so a downstream worker never re-evaluates an upstream worker's subgraph.
+
+Every ``IDataFrame`` action has an ``*_async`` twin returning an
+``IFuture``; the eager form is a facade — ``df.count()`` is literally
+``df.count_async().result()`` (docs/driver.md).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Any, Callable, Optional
+
+_task_ids = itertools.count()
+
+PENDING = "pending"
+RUNNING = "running"
+DONE = "done"
+FAILED = "failed"
+
+
+class JobTask:
+    """One schedulable unit of a job DAG (uniform across task kinds)."""
+
+    __slots__ = (
+        "id", "name", "kind", "worker", "fn", "deps", "dependents",
+        "remaining", "state", "result", "error", "event", "callbacks",
+        "cb_lock", "scheduler", "t_submit", "t_start", "t_end",
+    )
+
+    def __init__(self, name: str, kind: str, worker, fn: Callable[[], Any],
+                 deps: list["JobTask"]):
+        self.id = next(_task_ids)
+        self.name = name
+        self.kind = kind  # "action" | "native" | "reshard" | "stage"
+        self.worker = worker
+        self.fn = fn
+        self.deps = list(deps)
+        self.dependents: list[JobTask] = []
+        self.remaining = 0
+        self.state = PENDING
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+        self.event = threading.Event()
+        self.callbacks: list[Callable] = []
+        self.cb_lock = threading.Lock()  # guards callbacks vs resolution
+        self.scheduler = None  # set on submit; lets futures help-while-waiting
+        self.t_submit = time.perf_counter()
+        self.t_start = 0.0
+        self.t_end = 0.0
+
+    @property
+    def duration_ms(self) -> float:
+        return (self.t_end - self.t_start) * 1e3 if self.t_end else 0.0
+
+
+class IFuture:
+    """Async handle for a submitted job task (the paper-adjacent
+    Pilot-abstraction handle): ``result()`` blocks until the scheduler
+    resolves the task, propagating any executor exception."""
+
+    def __init__(self, task: JobTask):
+        self._task = task
+
+    @property
+    def task(self) -> JobTask:
+        return self._task
+
+    def done(self) -> bool:
+        return self._task.state in (DONE, FAILED)
+
+    def running(self) -> bool:
+        return self._task.state == RUNNING
+
+    def _wait(self, timeout: float | None):
+        task = self._task
+        sched = task.scheduler
+        held = () if sched is None else getattr(sched._local, "held_workers", ())
+        if not held:
+            if not task.event.wait(timeout):
+                raise TimeoutError(f"task {task.name!r} still {task.state}")
+            return
+        # Called from inside a running task while holding worker locks:
+        # parking here could deadlock (a task that needs one of OUR locks
+        # can never run on the pool). Cooperative wait instead — execute
+        # claimable tasks for workers this thread holds.
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        delay = 0.002  # back off once the help queue is drained
+        while not task.event.wait(delay):
+            while sched._help(held) and not task.event.is_set():
+                delay = 0.002
+            delay = min(delay * 2, 0.05)
+            if deadline is not None and time.perf_counter() >= deadline:
+                raise TimeoutError(f"task {task.name!r} still {task.state}")
+
+    def result(self, timeout: float | None = None):
+        self._wait(timeout)
+        if self._task.state == FAILED:
+            raise self._task.error
+        return self._task.result
+
+    def exception(self, timeout: float | None = None) -> Optional[BaseException]:
+        self._wait(timeout)
+        return self._task.error
+
+    def add_done_callback(self, fn: Callable[[JobTask], None]):
+        """Run ``fn(task)`` when the task resolves (immediately if it has).
+        Registration is synchronized with resolution (the event is set and
+        the callback list drained under the task's cb_lock), so a callback
+        can neither be lost nor fired twice."""
+        task = self._task
+        with task.cb_lock:
+            if not task.event.is_set():
+                task.callbacks.append(fn)
+                return
+        fn(task)
+
+
+class JobScheduler:
+    """Topological executor for job tasks across workers.
+
+    Ready tasks (all deps resolved) run on a shared thread pool; each task
+    acquires its worker's re-entrant job lock, so one worker's engine is
+    never entered concurrently while independent branches on *different*
+    workers overlap. Failure cascades: a dependent of a failed task fails
+    with the same error without running.
+    """
+
+    def __init__(self, max_threads: int = 16):
+        self.max_threads = max_threads
+        self._pool = None
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        self._running = 0
+        # ready tasks handed to the pool but not yet claimed — a blocked
+        # lock-holder (cooperative wait in IFuture.result) may claim and run
+        # one for a worker it holds
+        self._claimable: list[JobTask] = []
+        self.stats = {
+            "jobs_submitted": 0,
+            "tasks_submitted": 0,
+            "tasks_completed": 0,
+            "tasks_failed": 0,
+            "inline_runs": 0,
+            "helped_runs": 0,
+            "max_concurrent": 0,
+        }
+
+    # ------------------------------------------------------------------
+    def _ensure_pool(self):
+        with self._lock:
+            if self._pool is None:
+                from concurrent.futures import ThreadPoolExecutor
+
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.max_threads, thread_name_prefix="ignis-job"
+                )
+            return self._pool
+
+    def submit(self, task: JobTask) -> JobTask:
+        """Register a task; launches immediately when its deps are resolved."""
+        launch = failed_dep = None
+        task.scheduler = self
+        with self._lock:
+            self.stats["tasks_submitted"] += 1
+            for d in task.deps:
+                if d.state == FAILED:
+                    failed_dep = d
+                elif d.state != DONE:
+                    d.dependents.append(task)
+                    task.remaining += 1
+            if failed_dep is None and task.remaining == 0:
+                launch = task
+        if failed_dep is not None:
+            self._fail(task, failed_dep.error)
+        elif launch is not None:
+            self._launch(launch)
+        return task
+
+    def _launch(self, task: JobTask):
+        # A nested submission from inside a running task (a native app
+        # invoking an eager action) executes inline ONLY when this thread
+        # already holds the target worker's re-entrant lock — same-worker
+        # reentrancy must stay on this thread, while a foreign worker's task
+        # goes to the pool (acquiring a second worker's lock while holding
+        # one is the AB/BA deadlock shape). Ready dependents of a finished
+        # task also go to the pool: fan-out must not serialize on the
+        # finishing thread.
+        held = getattr(self._local, "held_workers", ())
+        if task.worker is not None and any(task.worker is w for w in held):
+            with self._lock:
+                self.stats["inline_runs"] += 1
+            self._run(task)
+        else:
+            with self._lock:
+                self._claimable.append(task)
+            self._ensure_pool().submit(self._run, task)
+
+    def _help(self, held) -> bool:
+        """Claim and run ONE ready task from a cooperative wait. Preference:
+        a task owned by a worker in ``held`` (locks the calling thread holds
+        — re-entrant, always safe). Failing that, any ready task whose
+        worker lock can be TRY-acquired: non-blocking acquisition adds no
+        wait-for edge, so it cannot create a deadlock cycle, and it keeps
+        the DAG draining even when every pool thread is parked (pool
+        exhaustion under deeply nested cross-worker calls). Returns True if
+        a task ran. A pool thread that also picked the task up blocks on
+        the worker lock, then finds it claimed (state != PENDING) and backs
+        off — no double run."""
+        cand = foreign = None
+        with self._lock:
+            for t in self._claimable:
+                if t.state != PENDING or t.worker is None:
+                    continue
+                if any(t.worker is w for w in held):
+                    cand = t
+                    break
+                if foreign is None:
+                    foreign = t
+            if cand is not None:
+                self.stats["helped_runs"] += 1
+        if cand is not None:
+            self._run(cand)  # held worker: re-entrant acquire, cannot block
+            return True
+        if foreign is not None:
+            lock = getattr(foreign.worker, "_job_lock", None)
+            if lock is None or lock.acquire(blocking=False):
+                try:
+                    with self._lock:
+                        self.stats["helped_runs"] += 1
+                    self._run_locked(foreign)
+                finally:
+                    if lock is not None:
+                        lock.release()
+                return True
+        return False
+
+    def _run(self, task: JobTask):
+        # Acquire the worker lock BEFORE claiming: a cooperative waiter that
+        # already holds the lock can claim the task while a pool thread is
+        # still parked on acquire; the late acquirer sees state != PENDING
+        # and backs off.
+        lock = getattr(task.worker, "_job_lock", None)
+        if lock is not None:
+            lock.acquire()
+        try:
+            self._run_locked(task)
+        finally:
+            if lock is not None:
+                lock.release()
+
+    def _unclaim_locked(self, task: JobTask):
+        """Drop a task leaving PENDING from the claimable list (caller holds
+        self._lock) — entries must not outlive their tasks, or the scheduler
+        would pin every job's closures and results for the process lifetime."""
+        for i, t in enumerate(self._claimable):
+            if t is task:
+                del self._claimable[i]
+                return
+
+    def _run_locked(self, task: JobTask):
+        with self._lock:
+            if task.state != PENDING:  # cascaded failure or claimed elsewhere
+                return
+            task.state = RUNNING
+            self._unclaim_locked(task)
+            self._running += 1
+            self.stats["max_concurrent"] = max(
+                self.stats["max_concurrent"], self._running
+            )
+        task.t_start = time.perf_counter()
+        held = getattr(self._local, "held_workers", ())
+        error = None
+        try:
+            self._local.held_workers = held + (task.worker,)
+            try:
+                task.result = task.fn()
+            finally:
+                self._local.held_workers = held
+        except BaseException as e:  # surfaced via IFuture.result()
+            error = e
+        task.t_end = time.perf_counter()
+        with self._lock:
+            self._running -= 1
+            if error is None:
+                task.state = DONE
+                self.stats["tasks_completed"] += 1
+            else:
+                task.error = error
+                task.state = FAILED
+                self.stats["tasks_failed"] += 1
+            task.fn = None  # never called again — release the closure (and
+            # with it the job memo / blocks it pins) once the task resolves
+            dependents = list(task.dependents)
+        self._resolve(task)
+        for dep in dependents:
+            self._dep_resolved(dep, task)
+
+    def _resolve(self, task: JobTask):
+        with task.cb_lock:
+            task.event.set()
+            callbacks, task.callbacks = task.callbacks, []
+        for cb in callbacks:
+            try:
+                cb(task)
+            except Exception:  # observer errors never poison the DAG
+                pass
+
+    def _fail(self, task: JobTask, error: BaseException):
+        """Cascade an upstream failure through ``task`` and its dependents."""
+        with self._lock:
+            if task.state in (DONE, FAILED):
+                return
+            task.error = error
+            task.state = FAILED
+            self._unclaim_locked(task)
+            task.fn = None
+            self.stats["tasks_failed"] += 1
+            dependents = list(task.dependents)
+        self._resolve(task)
+        for dep in dependents:
+            self._fail(dep, error)
+
+    def _dep_resolved(self, task: JobTask, dep: JobTask):
+        if dep.state == FAILED:
+            self._fail(task, dep.error)
+            return
+        launch = False
+        with self._lock:
+            task.remaining -= 1
+            launch = task.remaining == 0 and task.state == PENDING
+        if launch:
+            self._launch(task)
+
+
+_default: Optional[JobScheduler] = None
+_default_lock = threading.Lock()
+
+
+def default_scheduler() -> JobScheduler:
+    """The process-wide scheduler every implicit (eager-facade) job uses."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = JobScheduler()
+    return _default
+
+
+class IJob:
+    """A named group of driver submissions scheduled as one DAG.
+
+    ``submit_action`` walks the frame's lineage, cuts it at *task
+    boundaries* — native app nodes, ``importData`` reshards, and any edge
+    crossing worker ownership — and submits one job task per boundary node
+    plus the action task itself. Tasks share ``self.memo`` (the DagEngine
+    evaluation memo), so each subgraph is evaluated exactly once, by the
+    worker that owns it, and downstream tasks pick results out of the memo.
+
+    An ``IJob`` may span many frames, workers and actions; futures resolve
+    independently (out of submission order when the DAG allows).
+    """
+
+    def __init__(self, name: str = "job", scheduler: JobScheduler | None = None):
+        self.name = name
+        self.scheduler = scheduler or default_scheduler()
+        self.tasks: list[JobTask] = []
+        self.futures: list[IFuture] = []
+        self.memo: dict = {}  # TaskNode -> list[Block], shared across tasks
+        self._node_tasks: dict = {}  # TaskNode -> JobTask
+        self._t0 = time.perf_counter()
+        with self.scheduler._lock:
+            self.scheduler.stats["jobs_submitted"] += 1
+
+    # ---- lineage → job-task planning ----------------------------------
+    @staticmethod
+    def _task_kind(node) -> str:
+        if getattr(node, "task_kind", "dataflow") == "native":
+            return "native"
+        if node.op == "importData":
+            return "reshard"
+        return "stage"
+
+    @staticmethod
+    def _materialised(node) -> bool:
+        """Hole-free result: evaluation will short-circuit here, so planning
+        must neither schedule it nor descend past it. A cached node that
+        lost blocks (``kill_block``) is NOT materialised — its owner must
+        repair it under its own job lock."""
+        return node.result is not None and not any(b is None for b in node.result)
+
+    @classmethod
+    def _is_boundary(cls, node, consumer) -> bool:
+        """A parent node that must become its own job task."""
+        if cls._materialised(node):
+            return False
+        if getattr(node, "task_kind", "dataflow") == "native":
+            return True
+        if node.op == "importData":
+            return True
+        po, co = getattr(node, "owner", None), getattr(consumer, "owner", None)
+        return po is not None and co is not None and po is not co
+
+    def _dep_tasks(self, root) -> list[JobTask]:
+        """Job tasks for every boundary node reachable from ``root`` without
+        crossing another boundary (those become the boundary task's deps).
+        Traversal stops at materialised nodes: evaluation never descends
+        below them, so ancestors (including native apps with side effects)
+        must not be scheduled or re-executed."""
+        deps, stack, seen = [], [root], {root}
+        while stack:
+            n = stack.pop()
+            for p in n.parents:
+                if p in seen:
+                    continue
+                seen.add(p)
+                if self._materialised(p):
+                    continue
+                if self._is_boundary(p, n):
+                    deps.append(self._node_task(p))
+                else:
+                    stack.append(p)
+        return deps
+
+    def _node_task(self, node) -> JobTask:
+        """The (deduplicated) job task materialising ``node`` on its owner."""
+        t = self._node_tasks.get(node)
+        if t is not None:
+            return t
+        worker = getattr(node, "owner", None)
+        deps = self._dep_tasks(node)
+        memo = self.memo
+
+        def fn(_node=node, _worker=worker):
+            return _worker.engine.evaluate(_node, memo=memo)
+
+        t = JobTask(f"{node.op}#{node.id}", self._task_kind(node), worker, fn, deps)
+        self._node_tasks[node] = t
+        self.tasks.append(t)
+        self.scheduler.submit(t)
+        return t
+
+    # ---- submission ----------------------------------------------------
+    def submit_action(self, frame, name: str, blocks_fn=None, task_fn=None) -> IFuture:
+        """Schedule an action over ``frame``'s lineage; returns its future.
+
+        ``blocks_fn(blocks)`` maps the materialised root blocks to the
+        action result; alternatively ``task_fn(memo)`` takes over the whole
+        evaluation (early-exit actions like ``take``).
+        """
+        node, worker = frame.node, frame.worker
+        if self._materialised(node):
+            deps = []  # evaluation short-circuits at the root
+        elif self._is_boundary(node, node):  # native/reshard root: own task
+            deps = [self._node_task(node)]
+        else:
+            deps = self._dep_tasks(node)
+        memo = self.memo
+
+        def fn():
+            if task_fn is not None:
+                return task_fn(memo)
+            blocks = worker.engine.evaluate(node, memo=memo)
+            return blocks_fn(blocks)
+
+        t = JobTask(f"{name}({node.op}#{node.id})", "action", worker, fn, deps)
+        self.tasks.append(t)
+        self.scheduler.submit(t)
+        fut = IFuture(t)
+        self.futures.append(fut)
+        return fut
+
+    # ---- introspection -------------------------------------------------
+    def wait(self, timeout: float | None = None) -> list:
+        """Resolve every submitted future, in submission order. ``timeout``
+        is an overall deadline for the whole job, not per future."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        out = []
+        for f in self.futures:
+            left = None if deadline is None else max(0.0, deadline - time.perf_counter())
+            out.append(f.result(left))
+        return out
+
+    def release(self):
+        """Drop the job's evaluation memo and planning state. The shared
+        memo intentionally pins every evaluated subgraph's blocks for reuse
+        *within* the job; a long-lived job object should release() once its
+        futures are resolved to restore the eager path's memory lifetime.
+        ``persist()``-cached nodes are unaffected (they live on TaskNodes)."""
+        self.memo.clear()
+        self._node_tasks.clear()
+
+    def stats(self) -> dict:
+        by_state: dict[str, int] = {}
+        for t in self.tasks:
+            by_state[t.state] = by_state.get(t.state, 0) + 1
+        return {
+            "tasks": len(self.tasks),
+            "actions": sum(1 for t in self.tasks if t.kind == "action"),
+            "native": sum(1 for t in self.tasks if t.kind == "native"),
+            "reshard": sum(1 for t in self.tasks if t.kind == "reshard"),
+            "stage": sum(1 for t in self.tasks if t.kind == "stage"),
+            "done": by_state.get(DONE, 0),
+            "failed": by_state.get(FAILED, 0),
+            "workers": sorted({t.worker.name for t in self.tasks if t.worker}),
+            "wall_ms": (time.perf_counter() - self._t0) * 1e3,
+        }
+
+    def explain(self) -> str:
+        """Render the job DAG: one line per task with kind, owning worker,
+        dependencies, state and duration — the cross-worker complement of
+        ``df.explain()``'s per-lineage physical plan."""
+        lines = [f"== job {self.name!r} ({len(self.tasks)} tasks) =="]
+        for t in sorted(self.tasks, key=lambda t: t.id):
+            deps = ",".join(f"t{d.id}" for d in t.deps) or "-"
+            wname = t.worker.name if t.worker is not None else "?"
+            dur = f"{t.duration_ms:.1f}ms" if t.t_end else ""
+            lines.append(
+                f"  t{t.id} {t.kind}:{t.name}  worker={wname}  "
+                f"deps=[{deps}]  {t.state} {dur}".rstrip()
+            )
+        return "\n".join(lines)

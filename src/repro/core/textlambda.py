@@ -47,6 +47,16 @@ class ISource:
     def resolve(self) -> Callable:
         return resolve(self.fn)
 
+    def token(self) -> tuple:
+        """Hashable structural identity of (fn, params). Native call nodes
+        embed this in their lineage signature (``node.sig``), so the fusion
+        plan cache and the shuffle engine's capacity memory key on the
+        actual call — app *and* parameters — rather than on node identity."""
+        from repro.core.shuffle_plan import _static_token, fn_token
+
+        f = self.fn if isinstance(self.fn, str) else fn_token(self.fn)
+        return (f, tuple(sorted((k, _static_token(v)) for k, v in self.params.items())))
+
 
 def resolve(fn) -> Callable:
     """Accept a callable, a text lambda, or an ISource; return a callable."""

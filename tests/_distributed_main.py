@@ -120,6 +120,58 @@ def main():
     res = float(jnp.abs(laplacian_matvec_ref(xs) - jnp.asarray(b)).max())
     check("cg_8way", res < 5e-2)
 
+    # ---- job scheduler: hybrid native+dataflow job at p=8 ------------------
+    from repro.core.job import IJob
+    from repro.core.native import ignis_export
+    from repro.apps.stencil import stencil_native
+
+    ws8 = IWorker(w.cluster, "spmd")
+    grid = np.random.default_rng(2).normal(size=(16, 8)).astype(np.float32)
+    job = IJob("hybrid8")
+    st_f = ws8.call(
+        "stencil_app", ws8.parallelize(grid), iters=4
+    ).collect_async(job=job)
+    kv8 = w.parallelize(vals).map(lambda x: {"key": x % 7, "value": jnp.int32(1)})
+    cnt_f = kv8.reduce_by_key(lambda a, b: a + b, 0).collect_async(job=job)
+    got_st = np.stack([np.asarray(r) for r in st_f.result(120)])
+    native8 = np.asarray(
+        stencil_native(ws8.context.mesh, ws8.context.axis, jnp.asarray(grid), 4)
+    )
+    check("job_native_stage_p8", np.allclose(got_st, native8, atol=1e-6))
+    counts8 = {int(np.asarray(r["key"])): int(np.asarray(r["value"]))
+               for r in cnt_f.result(120)}
+    exp8 = {}
+    for v in vals:
+        exp8[int(v) % 7] = exp8.get(int(v) % 7, 0) + 1
+    check("job_hybrid_dataflow_p8", counts8 == exp8)
+    st_job = job.stats()
+    check("job_one_dag_p8",
+          st_job["native"] >= 1 and st_job["actions"] == 2
+          and st_job["failed"] == 0 and len(st_job["workers"]) == 2)
+
+    # call_partitions at p=8: partition-preserving native + kill_block repair
+    @ignis_export("scale8")
+    def scale8(ctx, data=None, valid=None):
+        return data * jnp.int32(int(ctx.var("k", 2))), valid
+
+    dfp = w.parallelize(np.arange(64, dtype=np.int32), blocks=4)
+    sc = w.call_partitions("scale8", dfp, k=3).persist()
+    got_sc = sorted(int(x) for x in sc.collect())
+    check("call_partitions_p8", got_sc == [x * 3 for x in range(64)])
+    check("call_partitions_blocks_p8", len(sc.node.result) == 4)
+    from repro.core.dag import DagEngine
+    DagEngine.kill_block(sc.node, 1)
+    check("call_partitions_repair_p8",
+          sorted(int(x) for x in sc.collect()) == got_sc)
+
+    # early-exit take at p=8: one block materialised out of four
+    it0 = w.engine.stats["iter_block_computes"]
+    tk = w.parallelize(np.arange(64, dtype=np.int32), blocks=4).map(
+        lambda x: x + 1).take(3)
+    check("take_early_exit_p8",
+          [int(x) for x in tk] == [1, 2, 3]
+          and w.engine.stats["iter_block_computes"] - it0 == 1)
+
     # ---- pipeline parallelism (4 stages × 8 microbatches) -------------------
     pmesh = make_pp_mesh(4, 1)
     S, M, mb, d = 4, 8, 2, 16
