@@ -33,6 +33,10 @@ def bench(n: int = 200_000):
             f"Mkeys/s={n/t/1e6:.2f} retries={st['overflow_retries']} "
             f"recompiles={st['wide_plan_misses']} "
             f"mem_hits={st['capacity_memory_hits']}"))
+    # no target= here: the spark arm is GIL-bound while the ignis arm is
+    # device-bound, so this ratio tracks machine load (observed 1.6x-7.9x)
+    # — declaring it stable would make the tools/check_bench.py gate flaky;
+    # the retries/recompiles counters above are terasort's stable gate
     rows.append(row("terasort_speedup", 0.0,
                     f"ignis_vs_spark={res['spark']/res['ignis']:.2f}x"))
     return rows

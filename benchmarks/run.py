@@ -8,6 +8,7 @@
   Fig 18     bench_tc          join/union/distinct fixed point
   Fig 19-22  bench_hpc_native  native SPMD apps via worker.call (overhead %)
   §3.2/Fig 2 bench_hybrid      one IJob: native + MapReduce branches overlap
+  §2.2/§5    bench_groups      gang-scheduled jobs on disjoint sub-meshes
   Table 5    bench_sloc        integration SLOC
   (ours)     roofline          §Roofline summary from the dry-run artifacts
 
@@ -34,6 +35,7 @@ SMOKE_KWARGS = {
     "kmeans": {},
     "minebench": {},
     "hybrid": {"n": 1 << 14, "cg_iters": 100, "iters": 2},
+    "groups": {"size": 2048, "cg_iters": 1000, "n": 1 << 10, "iters": 3},
 }
 
 BENCHES = [
@@ -45,6 +47,7 @@ BENCHES = [
     ("tc", "benchmarks.bench_tc"),
     ("hpc_native", "benchmarks.bench_hpc_native"),
     ("hybrid", "benchmarks.bench_hybrid"),
+    ("groups", "benchmarks.bench_groups"),
     ("sloc", "benchmarks.bench_sloc"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -12,7 +12,10 @@ models:
 plus the lazy task-dependency graph with lineage-based fault tolerance,
 the job-oriented driver layer (``IJob``/``IFuture``: every action submits
 into a cross-worker job DAG; eager actions are facades — docs/driver.md),
-and the driver-round-trip "spark mode" baseline the paper compares against.
+communicator groups (``IContext.split``/``group`` = ``MPI_Comm_split``;
+``IJob(group=...)`` gang-schedules jobs onto disjoint sub-meshes —
+docs/collectives.md), and the driver-round-trip "spark mode" baseline
+the paper compares against.
 """
 from repro.core.properties import IProperties  # noqa: F401
 from repro.core.cluster import Ignis, ICluster, IWorker  # noqa: F401

@@ -23,7 +23,7 @@ from repro.core.dag import DagEngine, TaskNode, node_sig
 from repro.core.shuffle_plan import ShuffleManager
 from repro.core.dataframe import IDataFrame
 from repro.core.native import get_app, load_library
-from repro.core.partition import Block, block_aval, concat_blocks, from_host
+from repro.core.partition import Block, block_aval, concat_blocks, from_host, place_block
 from repro.core.properties import IProperties
 from repro.core.textlambda import ISource
 
@@ -104,7 +104,8 @@ class IWorker:
         self.cluster = cluster
         self.kind = kind
         self.name = name or f"{kind}-{len(cluster.workers)}"
-        self.context = IContext(cluster.mesh, "data", cluster.props, self)
+        self._base_context = IContext(cluster.mesh, "data", cluster.props, self)
+        self._ctx_local = threading.local()
         self.engine = DagEngine(
             fusion=cluster.props.get_bool("ignis.fusion.enabled", True),
             plan_cache_size=cluster.props.get_int("ignis.fusion.plan.cache.size", 128),
@@ -113,19 +114,95 @@ class IWorker:
         self.capacity_factor = cluster.props.get_float("ignis.shuffle.capacity.factor", 2.0)
         self.join_max_matches = cluster.props.get_int("ignis.join.max.matches", 8)
         self.shuffle = ShuffleManager(
-            self.context,
+            self._base_context,
+            worker=self,
             capacity_factor=self.capacity_factor,
             join_max_matches=self.join_max_matches,
             plan_cache_size=cluster.props.get_int("ignis.shuffle.plan.cache.size", 64),
             headroom=cluster.props.get_float("ignis.shuffle.memory.headroom", 1.25),
         )
         self._libraries: list[str] = []
-        # job-scheduler serialisation point: a worker's engine is single-
-        # threaded; the scheduler overlaps tasks across workers, never within
-        # one (core/job.py). Re-entrant so nested eager actions inside a
-        # running native task execute inline.
+        # job-scheduler serialisation points (core/job.py): the base lock
+        # covers the whole worker; gang-scheduled tasks instead hold one
+        # GROUP lock each, so two tasks on disjoint sub-meshes of this
+        # worker run concurrently. All re-entrant so nested eager actions
+        # inside a running native task execute inline.
         self._job_lock = threading.RLock()
+        # id(ctx) → (ctx, lock, pinned): the ctx reference pins the id
+        # against reuse; pinned entries (worker.groups() splits) live
+        # forever, ad-hoc entries are evicted FIFO beyond the cap so a
+        # driver minting a fresh group per job cannot grow this unboundedly
+        from collections import OrderedDict
+
+        self._group_locks: "OrderedDict[int, tuple]" = OrderedDict()
+        self._groups: dict[int, list[IContext]] = {}
+        self._groups_guard = threading.Lock()
         cluster.workers.append(self)
+
+    _GROUP_LOCK_CAP = 256
+
+    # ------------------------------------------------------------------
+    # communicator groups (MPI_Comm_split over the worker mesh)
+    # ------------------------------------------------------------------
+    @property
+    def context(self) -> IContext:
+        """The worker's ACTIVE communicator: the base (world) context, or
+        the group communicator installed by ``use_group`` on this thread —
+        how a gang-scheduled task retargets every collective, wide stage
+        and native app onto its sub-mesh (docs/collectives.md)."""
+        return getattr(self._ctx_local, "ctx", None) or self._base_context
+
+    def use_group(self, ctx: "IContext | None"):
+        """Context manager binding this THREAD's active communicator."""
+        import contextlib
+
+        @contextlib.contextmanager
+        def _bind():
+            prev = getattr(self._ctx_local, "ctx", None)
+            self._ctx_local.ctx = ctx
+            try:
+                yield ctx or self._base_context
+            finally:
+                self._ctx_local.ctx = prev
+
+        return _bind()
+
+    def groups(self, n_groups: int) -> "list[IContext]":
+        """The worker's cached ``n_groups``-way split of its base mesh.
+        Cached so every job gang-scheduled at the same width shares one set
+        of group communicators — and one group lock per slice, keeping two
+        GROUPED jobs from oversubscribing the same slice concurrently.
+        Ungrouped (world) tasks hold the worker lock, which deliberately
+        does not exclude group locks: for strict slice isolation keep a
+        worker's concurrent jobs all-grouped (mixing is safe — results are
+        correct and caches are locked — just oversubscribed;
+        docs/collectives.md)."""
+        with self._groups_guard:
+            gs = self._groups.get(n_groups)
+            if gs is None:
+                gs = self._base_context.split(n_groups)
+                self._groups[n_groups] = gs
+                for g in gs:
+                    self._group_locks[id(g)] = (g, threading.RLock(), True)
+            return gs
+
+    def group_lock(self, ctx: IContext) -> threading.RLock:
+        """The job lock guarding a group communicator's device slice. An
+        unknown (caller-built) group context gets its own lock on demand;
+        such ad-hoc entries are evicted FIFO beyond ``_GROUP_LOCK_CAP``
+        (tasks created earlier keep their lock object — at worst an
+        evicted-and-reminted slice is briefly oversubscribed, never
+        corrupted, since every task still binds its own communicator)."""
+        with self._groups_guard:
+            entry = self._group_locks.get(id(ctx))
+            if entry is None:
+                entry = self._group_locks[id(ctx)] = (ctx, threading.RLock(), False)
+                if len(self._group_locks) > self._GROUP_LOCK_CAP:
+                    for key, (_c, _l, pinned) in list(self._group_locks.items()):
+                        if not pinned:
+                            del self._group_locks[key]
+                            break
+            return entry[1]
 
     # ------------------------------------------------------------------
     # introspection: stage compilation (DESIGN.md §5)
@@ -261,10 +338,14 @@ class IWorker:
         return app, name, params, isrc.token()
 
     @staticmethod
-    def _native_args(parent_results):
+    def _native_args(ctx, parent_results):
+        """Materialise a native app's data args on the app's communicator.
+        Under gang scheduling the bound ctx is a group sub-mesh while parent
+        blocks may live on the world mesh (or another group) — the
+        device_put here is the inter-group reshard edge for native tasks."""
         if not parent_results:
             return ()
-        b = concat_blocks(parent_results[0])
+        b = place_block(concat_blocks(parent_results[0]), ctx.mesh, ctx.axis)
         return (b.data, b.valid)
 
     def void_call_async(self, fn_name, df: IDataFrame | None = None, job=None,
@@ -288,7 +369,7 @@ class IWorker:
 
         def fn(parent_results):
             ctx = worker.context.bind(params)  # execution-time binding
-            out_cell["value"] = app(ctx, *worker._native_args(parent_results))
+            out_cell["value"] = app(ctx, *worker._native_args(ctx, parent_results))
             return []  # void: no blocks enter the lineage
 
         node = TaskNode(f"voidCall:{name}", parents, fn=fn, narrow=False)
@@ -322,7 +403,7 @@ class IWorker:
 
         def fn(parent_results):
             ctx = worker.context.bind(params)  # execution-time binding
-            out = app(ctx, *worker._native_args(parent_results))
+            out = app(ctx, *worker._native_args(ctx, parent_results))
             if isinstance(out, Block):
                 return [out]
             data, valid = out

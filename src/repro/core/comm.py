@@ -8,10 +8,15 @@ ICI/DCN instead of send/recv on Infiniband.
 
 "Non-blocking" variants are jax's async dispatch itself (every call below
 returns before the transfer completes; jax.block_until_ready is MPI_Wait).
+
+Every collective binds to the context's OWN mesh — hand it a group context
+(``IContext.split``/``group``, docs/collectives.md) and it runs on the
+group's sub-mesh and axis, never touching executors outside the group.
+Inputs are placed onto the context's mesh first (a no-op when already
+there), so an array produced under one communicator can enter a collective
+on another — the device_put IS the inter-group reshard edge.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +34,14 @@ def _sharded(ctx):  # leading dim sharded over the context axis
     return P(ctx.axis)
 
 
+def _placed(ctx: IContext, x, spec=None):
+    """Commit ``x`` to the context's mesh (no-op when already resident).
+    A shard_map over a group mesh rejects operands committed to a different
+    device set; placing first makes every collective group-portable."""
+    spec = _sharded(ctx) if spec is None else spec
+    return jax.device_put(x, jax.NamedSharding(ctx.mesh, spec))
+
+
 # ---------------------------------------------------------------------------
 # collectives (gather / scatter / bcast / reduce / allreduce / alltoall …)
 # ---------------------------------------------------------------------------
@@ -42,7 +55,7 @@ def allreduce(ctx: IContext, x, op: str = "sum"):
         local = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}[op](xs, axis=0)
         return red(local, ctx.axis)
 
-    return _smap(ctx, f, (_sharded(ctx),), P())(x)
+    return _smap(ctx, f, (_sharded(ctx),), P())(_placed(ctx, x))
 
 
 def reduce(ctx: IContext, x, op: str = "sum"):
@@ -52,7 +65,7 @@ def reduce(ctx: IContext, x, op: str = "sum"):
 
 def bcast(ctx: IContext, x):
     """MPI_Bcast: replicate a driver value across executors."""
-    return jax.device_put(x, jax.NamedSharding(ctx.mesh, P()))
+    return _placed(ctx, x, P())
 
 
 def gather(ctx: IContext, x):
@@ -61,12 +74,12 @@ def gather(ctx: IContext, x):
     def f(xs):
         return jax.lax.all_gather(xs, ctx.axis, tiled=True)
 
-    return _smap(ctx, f, (_sharded(ctx),), P())(x)
+    return _smap(ctx, f, (_sharded(ctx),), P())(_placed(ctx, x))
 
 
 def scatter(ctx: IContext, x):
     """MPI_Scatter: replicated (n, …) → axis-sharded (n, …)."""
-    return jax.device_put(x, jax.NamedSharding(ctx.mesh, _sharded(ctx)))
+    return _placed(ctx, x)
 
 
 def alltoall(ctx: IContext, x):
@@ -74,14 +87,21 @@ def alltoall(ctx: IContext, x):
     (k, …) rows destined for each peer in order. Returns same shape with
     rows regrouped by source."""
     p = ctx.executors
+    n = x.shape[0]
+    if n % p or (n // p) % p:
+        # a silent reshape here would regroup rows to the WRONG peers
+        raise ValueError(
+            f"alltoall needs the local row count divisible by the communicator "
+            f"size: total {n} rows over {p} executors gives "
+            f"{n / p:g} local rows, which must be a multiple of {p}")
 
-    def f(xs):  # xs: (p*k/p ... ) local (p, k/p?) — reshape to (p, k)
+    def f(xs):  # xs local: (k_total, …) with k_total = n/p — regroup to (p, k)
         k = xs.shape[0] // p
         y = xs.reshape(p, k, *xs.shape[1:])
         y = jax.lax.all_to_all(y, ctx.axis, split_axis=0, concat_axis=0, tiled=False)
         return y.reshape(p * k, *xs.shape[1:])
 
-    return _smap(ctx, f, (_sharded(ctx),), _sharded(ctx))(x)
+    return _smap(ctx, f, (_sharded(ctx),), _sharded(ctx))(_placed(ctx, x))
 
 
 def ppermute(ctx: IContext, x, shift: int = 1):
@@ -92,7 +112,7 @@ def ppermute(ctx: IContext, x, shift: int = 1):
     def f(xs):
         return jax.lax.ppermute(xs, ctx.axis, perm)
 
-    return _smap(ctx, f, (_sharded(ctx),), _sharded(ctx))(x)
+    return _smap(ctx, f, (_sharded(ctx),), _sharded(ctx))(_placed(ctx, x))
 
 
 def barrier(ctx: IContext):
@@ -112,7 +132,7 @@ def exscan(ctx: IContext, x, op: str = "sum"):
         mask = jnp.arange(all_.shape[0]) < idx
         return jnp.sum(all_ * mask, axis=0, keepdims=True)
 
-    return _smap(ctx, f, (_sharded(ctx),), _sharded(ctx))(x)
+    return _smap(ctx, f, (_sharded(ctx),), _sharded(ctx))(_placed(ctx, x))
 
 
 # ---------------------------------------------------------------------------
@@ -122,13 +142,8 @@ def exscan(ctx: IContext, x, op: str = "sum"):
 
 def shard_rows(ctx: IContext, x):
     """Place an (N, …) array sharded by rows over the executor axis."""
-    return jax.device_put(x, jax.NamedSharding(ctx.mesh, _sharded(ctx)))
+    return _placed(ctx, x)
 
 
 def replicate(ctx: IContext, x):
-    return jax.device_put(x, jax.NamedSharding(ctx.mesh, P()))
-
-
-@functools.lru_cache(maxsize=None)
-def _cached_jit(fn, *static):
-    return jax.jit(fn, static_argnums=tuple(range(1, 1 + len(static))))
+    return _placed(ctx, x, P())

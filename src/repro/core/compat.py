@@ -23,6 +23,19 @@ def make_mesh(axis_shapes, axis_names):
     return jax.make_mesh(axis_shapes, axis_names)
 
 
+def make_mesh_of(devices, axis_names):
+    """A Mesh over an EXPLICIT device array — the communicator-group path
+    (``IContext.split``/``group``): sub-meshes must pin their device subset,
+    which ``jax.make_mesh`` (auto device selection) cannot express."""
+    if _HAS_AXIS_TYPE:
+        kinds = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        try:
+            return jax.sharding.Mesh(devices, axis_names, axis_types=kinds)
+        except TypeError:  # jax window with AxisType but no Mesh kwarg
+            pass
+    return jax.sharding.Mesh(devices, axis_names)
+
+
 def get_ambient_mesh():
     """The mesh installed by ``set_mesh`` (or None): the abstract mesh on new
     jax, the thread-resources physical mesh on old."""

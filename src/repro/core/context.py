@@ -6,6 +6,11 @@ The TPU analogue of IgnisHPC's MPI communicators (paper Fig. 4):
                          (device along the "data" axis) participates
   driver communicator  → host↔device transfers (device_put / device_get)
   inter-worker comm.   → resharding between two workers' meshes (importData)
+  group communicator   → ``split``/``group`` (the ``MPI_Comm_split`` /
+                         ``MPI_Comm_create`` analogues): a sub-mesh over a
+                         subset of the executors with its own collective
+                         axis — collectives inside the group never touch
+                         devices outside it (docs/collectives.md)
 
 Inside a native SPMD program the context is what ``MPI_COMM_WORLD`` is to an
 MPI code: ``ctx.axis`` names the collective axis for jax.lax primitives, and
@@ -14,9 +19,12 @@ parses LULESH's argv from exactly this mechanism).
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Sequence
 
 import jax
+import numpy as np
+
+from repro.core import compat
 
 
 class IContext:
@@ -26,6 +34,9 @@ class IContext:
         self.props = props
         self.worker = worker
         self._vars: dict[str, Any] = {}
+        # communicator-group lineage (None / () for the base communicator)
+        self.parent: "IContext | None" = None
+        self.group_ranks: tuple[int, ...] = ()
 
     # ---- communicator surface (the MPI_COMM_WORLD analogue) ---------------
     def comm(self):
@@ -40,6 +51,60 @@ class IContext:
     def rank(self):
         """Executor rank — only meaningful inside shard_map'd code."""
         return jax.lax.axis_index(self.axis)
+
+    # ---- communicator groups (MPI_Comm_split / MPI_Comm_create) -----------
+    @property
+    def is_group(self) -> bool:
+        return self.parent is not None
+
+    def label(self) -> str:
+        """Human-readable communicator name for explain()/locks."""
+        if not self.is_group:
+            return self.axis
+        lo, hi = self.group_ranks[0], self.group_ranks[-1]
+        return f"{self.parent.label()}[{lo}:{hi + 1}]"
+
+    def group(self, ranks: Sequence[int]) -> "IContext":
+        """``MPI_Comm_create``: a sub-communicator over ``ranks`` of THIS
+        communicator's axis. The group gets its own mesh — a sub-mesh pinned
+        to the ranks' devices — so every collective issued through it spans
+        only those executors. Driver vars are inherited (snapshot)."""
+        p = self.executors
+        ranks = tuple(int(r) for r in ranks)
+        if not ranks:
+            raise ValueError("group() needs at least one rank")
+        if len(set(ranks)) != len(ranks):
+            raise ValueError(f"group() ranks must be distinct, got {ranks}")
+        bad = [r for r in ranks if not 0 <= r < p]
+        if bad:
+            raise ValueError(
+                f"group() ranks {bad} out of range for {p} executors")
+        dim = list(self.mesh.axis_names).index(self.axis)
+        devs = np.take(np.asarray(self.mesh.devices), ranks, axis=dim)
+        sub = IContext(
+            compat.make_mesh_of(devs, self.mesh.axis_names),
+            self.axis, self.props, self.worker,
+        )
+        sub._vars = dict(self._vars)
+        sub.parent = self
+        sub.group_ranks = ranks
+        return sub
+
+    def split(self, n_groups: int) -> "list[IContext]":
+        """``MPI_Comm_split`` with ``color = rank // (p / n_groups)``: carve
+        the communicator into ``n_groups`` contiguous equal sub-meshes.
+        Rejects uneven splits — capacity padding and PSRS bucketing both
+        assume every group member holds the same row count, so a ragged
+        split would silently skew capacities (DESIGN.md §1)."""
+        p = self.executors
+        if n_groups < 1:
+            raise ValueError(f"split() needs n_groups >= 1, got {n_groups}")
+        if p % n_groups:
+            raise ValueError(
+                f"split({n_groups}) does not divide {p} executors evenly; "
+                f"use group(ranks) for ragged sub-communicators")
+        k = p // n_groups
+        return [self.group(range(i * k, (i + 1) * k)) for i in range(n_groups)]
 
     # ---- driver↔executor variable exchange (ISource.addParam / context.var)
     def set_var(self, name: str, value):
@@ -57,6 +122,8 @@ class IContext:
     def child(self, **extra_vars) -> "IContext":
         c = IContext(self.mesh, self.axis, self.props, self.worker)
         c._vars = {**self._vars, **extra_vars}
+        c.parent = self.parent  # a child of a group stays in the group
+        c.group_ranks = self.group_ranks
         return c
 
     def bind(self, params: dict) -> "IContext":

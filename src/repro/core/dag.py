@@ -118,6 +118,12 @@ class DagEngine:
         self.fusion = fusion
         self.plan_cache_size = plan_cache_size
         self._plan_cache: "OrderedDict[tuple, Callable]" = OrderedDict()
+        # gang-scheduled tasks (core/job.py) enter one engine from several
+        # threads at once (disjoint sub-meshes of one worker); the LRU's
+        # get+move/insert+evict sequences are not atomic under the GIL
+        import threading
+
+        self._plan_lock = threading.Lock()
         self.stats = {
             "node_computes": 0,
             "wide_computes": 0,
@@ -250,12 +256,13 @@ class DagEngine:
         import jax
 
         key = (stage.signature, _block_aval(block))
-        fn = self._plan_cache.get(key)
-        if fn is not None:
-            self._plan_cache.move_to_end(key)
-            self.stats["plan_cache_hits"] += 1
-            return fn
-        self.stats["plan_cache_misses"] += 1
+        with self._plan_lock:
+            fn = self._plan_cache.get(key)
+            if fn is not None:
+                self._plan_cache.move_to_end(key)
+                self.stats["plan_cache_hits"] += 1
+                return fn
+            self.stats["plan_cache_misses"] += 1
         kernels = [n.fuse_fn for n in stage.nodes]
 
         def composed(data, valid):
@@ -267,10 +274,11 @@ class DagEngine:
             return b.data, b.valid
 
         fn = jax.jit(composed)
-        self._plan_cache[key] = fn
-        while len(self._plan_cache) > self.plan_cache_size:
-            self._plan_cache.popitem(last=False)
-            self.stats["plan_cache_evictions"] += 1
+        with self._plan_lock:
+            self._plan_cache[key] = fn
+            while len(self._plan_cache) > self.plan_cache_size:
+                self._plan_cache.popitem(last=False)
+                self.stats["plan_cache_evictions"] += 1
         return fn
 
     # ---- evaluation ---------------------------------------------------------

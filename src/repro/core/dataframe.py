@@ -184,7 +184,7 @@ class IDataFrame:
         rng = random.Random(seed)
         return rng.sample(rows, min(n, len(rows)))
 
-    def foreach_async(self, fn, job=None):
+    def foreach_async(self, fn, job=None, group=None):
         fn = resolve(fn)
 
         def act(blocks):
@@ -192,7 +192,7 @@ class IDataFrame:
                 for row in to_host(b):
                     fn(row)
 
-        return self._submit("foreach", act, job=job)
+        return self._submit("foreach", act, job=job, group=group)
 
     def foreach(self, fn):
         """Action: apply a host-side fn to every valid row (paper's Void fns)."""
@@ -377,26 +377,28 @@ class IDataFrame:
     # (docs/driver.md). Pass ``job=`` to group many submissions — possibly
     # across workers and frames — into one scheduled job DAG.
     # ------------------------------------------------------------------
-    def _submit(self, name: str, blocks_fn=None, task_fn=None, job=None):
+    def _submit(self, name: str, blocks_fn=None, task_fn=None, job=None,
+                group=None):
         from repro.core.job import IJob
 
         if job is None:
             job = IJob(f"{name}@{self.worker.name}")
-        return job.submit_action(self, name, blocks_fn=blocks_fn, task_fn=task_fn)
+        return job.submit_action(self, name, blocks_fn=blocks_fn, task_fn=task_fn,
+                                 group=group)
 
-    def count_async(self, job=None):
+    def count_async(self, job=None, group=None):
         def act(blocks):
             total = 0
             for b in blocks:
                 total += int(jax.device_get(ex.count_block(b)))
             return total
 
-        return self._submit("count", act, job=job)
+        return self._submit("count", act, job=job, group=group)
 
     def count(self) -> int:
         return self.count_async().result()
 
-    def reduce_async(self, fn, identity=0, job=None):
+    def reduce_async(self, fn, identity=0, job=None, group=None):
         fn = resolve(fn)
 
         def act(blocks):
@@ -404,7 +406,7 @@ class IDataFrame:
             vfn = lambda a, c: jax.tree.map(fn, a, c)  # noqa: E731
             return jax.device_get(ex.pairwise_reduce(b.data, b.valid, vfn, identity))
 
-        return self._submit("reduce", act, job=job)
+        return self._submit("reduce", act, job=job, group=group)
 
     def reduce(self, fn, identity=0):
         return self.reduce_async(fn, identity).result()
@@ -470,19 +472,19 @@ class IDataFrame:
             return pick(rows, key=lambda r: float(np.asarray(key_fn(r))))
         return jax.device_get(jax.tree.map(lambda x: x[i], b.data))
 
-    def collect_async(self, job=None):
+    def collect_async(self, job=None, group=None):
         def act(blocks):
             out = []
             for b in blocks:
                 out.extend(to_host(b))
             return out
 
-        return self._submit("collect", act, job=job)
+        return self._submit("collect", act, job=job, group=group)
 
     def collect(self) -> list:
         return self.collect_async().result()
 
-    def take_async(self, k: int, job=None):
+    def take_async(self, k: int, job=None, group=None):
         """Early-exit take: blocks materialise one at a time through the
         engine's lazy block iterator and evaluation stops as soon as ``k``
         valid rows exist — a 100-block lineage pays for one block when the
@@ -497,7 +499,7 @@ class IDataFrame:
                     break
             return out[:k]
 
-        return self._submit("take", task_fn=run, job=job)
+        return self._submit("take", task_fn=run, job=job, group=group)
 
     def take(self, k: int) -> list:
         return self.take_async(k).result()

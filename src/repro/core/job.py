@@ -45,10 +45,11 @@ class JobTask:
         "id", "name", "kind", "worker", "fn", "deps", "dependents",
         "remaining", "state", "result", "error", "event", "callbacks",
         "cb_lock", "scheduler", "t_submit", "t_start", "t_end",
+        "group", "node", "lock",
     )
 
     def __init__(self, name: str, kind: str, worker, fn: Callable[[], Any],
-                 deps: list["JobTask"]):
+                 deps: list["JobTask"], group=None, node=None):
         self.id = next(_task_ids)
         self.name = name
         self.kind = kind  # "action" | "native" | "reshard" | "stage"
@@ -67,6 +68,19 @@ class JobTask:
         self.t_submit = time.perf_counter()
         self.t_start = 0.0
         self.t_end = 0.0
+        # gang scheduling (docs/collectives.md): the group communicator this
+        # task executes on (None → the worker's base mesh), the TaskNode it
+        # materialises (for inter-group reshard edges), and the serialisation
+        # lock it must hold — the worker's job lock, or the GROUP's lock so
+        # tasks on disjoint sub-meshes of one worker run concurrently.
+        self.group = group
+        self.node = node
+        if worker is None:
+            self.lock = None
+        elif group is not None and hasattr(worker, "group_lock"):
+            self.lock = worker.group_lock(group)
+        else:
+            self.lock = getattr(worker, "_job_lock", None)
 
     @property
     def duration_ms(self) -> float:
@@ -94,15 +108,15 @@ class IFuture:
     def _wait(self, timeout: float | None):
         task = self._task
         sched = task.scheduler
-        held = () if sched is None else getattr(sched._local, "held_workers", ())
+        held = () if sched is None else getattr(sched._local, "held_locks", ())
         if not held:
             if not task.event.wait(timeout):
                 raise TimeoutError(f"task {task.name!r} still {task.state}")
             return
-        # Called from inside a running task while holding worker locks:
+        # Called from inside a running task while holding job locks:
         # parking here could deadlock (a task that needs one of OUR locks
         # can never run on the pool). Cooperative wait instead — execute
-        # claimable tasks for workers this thread holds.
+        # claimable tasks guarded by locks this thread holds.
         deadline = None if timeout is None else time.perf_counter() + timeout
         delay = 0.002  # back off once the help queue is drained
         while not task.event.wait(delay):
@@ -139,10 +153,17 @@ class JobScheduler:
     """Topological executor for job tasks across workers.
 
     Ready tasks (all deps resolved) run on a shared thread pool; each task
-    acquires its worker's re-entrant job lock, so one worker's engine is
-    never entered concurrently while independent branches on *different*
-    workers overlap. Failure cascades: a dependent of a failed task fails
-    with the same error without running.
+    acquires its serialisation lock — the owning worker's re-entrant job
+    lock, or, for a gang-scheduled task, the lock of its GROUP communicator
+    (docs/collectives.md) — so two tasks holding the SAME lock never run
+    concurrently, while independent branches on different workers and on
+    disjoint sub-meshes of the same worker overlap. The worker lock does
+    not exclude group locks: an ungrouped (world-mesh) task may run
+    alongside gang tasks of the same worker — correct (engine caches are
+    locked, placement is re-established per stage) but oversubscribed, so
+    keep a worker's concurrent jobs all-grouped for strict slice
+    isolation. Failure cascades: a dependent of a failed task fails with
+    the same error without running.
     """
 
     def __init__(self, max_threads: int = 16):
@@ -153,7 +174,7 @@ class JobScheduler:
         self._running = 0
         # ready tasks handed to the pool but not yet claimed — a blocked
         # lock-holder (cooperative wait in IFuture.result) may claim and run
-        # one for a worker it holds
+        # one guarded by a lock it holds
         self._claimable: list[JobTask] = []
         self.stats = {
             "jobs_submitted": 0,
@@ -163,6 +184,8 @@ class JobScheduler:
             "inline_runs": 0,
             "helped_runs": 0,
             "max_concurrent": 0,
+            "gang_tasks": 0,       # tasks run on a group communicator
+            "group_reshards": 0,   # inter-group reshard edges executed
         }
 
     # ------------------------------------------------------------------
@@ -199,14 +222,14 @@ class JobScheduler:
     def _launch(self, task: JobTask):
         # A nested submission from inside a running task (a native app
         # invoking an eager action) executes inline ONLY when this thread
-        # already holds the target worker's re-entrant lock — same-worker
-        # reentrancy must stay on this thread, while a foreign worker's task
-        # goes to the pool (acquiring a second worker's lock while holding
-        # one is the AB/BA deadlock shape). Ready dependents of a finished
-        # task also go to the pool: fan-out must not serialize on the
-        # finishing thread.
-        held = getattr(self._local, "held_workers", ())
-        if task.worker is not None and any(task.worker is w for w in held):
+        # already holds the task's serialisation lock — same-lock
+        # reentrancy must stay on this thread, while a task guarded by a
+        # foreign lock goes to the pool (acquiring a second job lock while
+        # holding one is the AB/BA deadlock shape). Ready dependents of a
+        # finished task also go to the pool: fan-out must not serialize on
+        # the finishing thread.
+        held = getattr(self._local, "held_locks", ())
+        if task.lock is not None and any(task.lock is l for l in held):
             with self._lock:
                 self.stats["inline_runs"] += 1
             self._run(task)
@@ -217,21 +240,21 @@ class JobScheduler:
 
     def _help(self, held) -> bool:
         """Claim and run ONE ready task from a cooperative wait. Preference:
-        a task owned by a worker in ``held`` (locks the calling thread holds
+        a task guarded by a lock in ``held`` (this thread already holds it
         — re-entrant, always safe). Failing that, any ready task whose
-        worker lock can be TRY-acquired: non-blocking acquisition adds no
+        lock can be TRY-acquired: non-blocking acquisition adds no
         wait-for edge, so it cannot create a deadlock cycle, and it keeps
         the DAG draining even when every pool thread is parked (pool
         exhaustion under deeply nested cross-worker calls). Returns True if
         a task ran. A pool thread that also picked the task up blocks on
-        the worker lock, then finds it claimed (state != PENDING) and backs
+        the task lock, then finds it claimed (state != PENDING) and backs
         off — no double run."""
         cand = foreign = None
         with self._lock:
             for t in self._claimable:
-                if t.state != PENDING or t.worker is None:
+                if t.state != PENDING or t.lock is None:
                     continue
-                if any(t.worker is w for w in held):
+                if any(t.lock is l for l in held):
                     cand = t
                     break
                 if foreign is None:
@@ -239,10 +262,10 @@ class JobScheduler:
             if cand is not None:
                 self.stats["helped_runs"] += 1
         if cand is not None:
-            self._run(cand)  # held worker: re-entrant acquire, cannot block
+            self._run(cand)  # held lock: re-entrant acquire, cannot block
             return True
         if foreign is not None:
-            lock = getattr(foreign.worker, "_job_lock", None)
+            lock = foreign.lock
             if lock is None or lock.acquire(blocking=False):
                 try:
                     with self._lock:
@@ -255,11 +278,11 @@ class JobScheduler:
         return False
 
     def _run(self, task: JobTask):
-        # Acquire the worker lock BEFORE claiming: a cooperative waiter that
+        # Acquire the task lock BEFORE claiming: a cooperative waiter that
         # already holds the lock can claim the task while a pool thread is
         # still parked on acquire; the late acquirer sees state != PENDING
         # and backs off.
-        lock = getattr(task.worker, "_job_lock", None)
+        lock = task.lock
         if lock is not None:
             lock.acquire()
         try:
@@ -288,14 +311,25 @@ class JobScheduler:
                 self.stats["max_concurrent"], self._running
             )
         task.t_start = time.perf_counter()
-        held = getattr(self._local, "held_workers", ())
+        held = getattr(self._local, "held_locks", ())
         error = None
         try:
-            self._local.held_workers = held + (task.worker,)
+            self._local.held_locks = held + (task.lock,)
             try:
-                task.result = task.fn()
+                # the runner (not the task fn) binds the communicator: a
+                # cooperative helper thread may carry another task's group
+                # binding, so every task re-binds its own (None → base mesh)
+                worker = task.worker
+                if worker is not None and hasattr(worker, "use_group"):
+                    if task.group is not None:
+                        with self._lock:
+                            self.stats["gang_tasks"] += 1
+                    with worker.use_group(task.group):
+                        task.result = task.fn()
+                else:
+                    task.result = task.fn()
             finally:
-                self._local.held_workers = held
+                self._local.held_locks = held
         except BaseException as e:  # surfaced via IFuture.result()
             error = e
         task.t_end = time.perf_counter()
@@ -352,6 +386,39 @@ class JobScheduler:
             self._launch(task)
 
 
+class _TaskMemo(dict):
+    """Task-local view of a job's shared evaluation memo: resharded copies
+    of cross-group dep results live in this dict (reads prefer them, so the
+    consumer's engine sees blocks on ITS communicator), while every new
+    materialisation writes through to the shared memo for downstream
+    reuse. The shared memo itself is never re-placed — see
+    ``IJob._task_memo``."""
+
+    __slots__ = ("_shared",)
+
+    def __init__(self, shared: dict, overlay: dict):
+        super().__init__(overlay)
+        self._shared = shared
+
+    def __contains__(self, key):
+        return dict.__contains__(self, key) or key in self._shared
+
+    def __getitem__(self, key):
+        try:
+            return dict.__getitem__(self, key)
+        except KeyError:
+            return self._shared[key]
+
+    def get(self, key, default=None):
+        if dict.__contains__(self, key):
+            return dict.__getitem__(self, key)
+        return self._shared.get(key, default)
+
+    def __setitem__(self, key, value):
+        dict.__setitem__(self, key, value)
+        self._shared[key] = value
+
+
 _default: Optional[JobScheduler] = None
 _default_lock = threading.Lock()
 
@@ -377,11 +444,24 @@ class IJob:
 
     An ``IJob`` may span many frames, workers and actions; futures resolve
     independently (out of submission order when the DAG allows).
+
+    Gang scheduling (docs/collectives.md): ``group=`` pins EVERY task of
+    the job onto one communicator group (a per-job sub-cluster — two such
+    jobs on disjoint groups run concurrently on different slices of the
+    mesh); ``gang=n`` instead splits each owning worker's mesh ``n`` ways
+    and deals successive submissions onto the groups round-robin. A task
+    consuming blocks that a different group produced gets an inter-group
+    reshard edge: the blocks are device_put sub-mesh → sub-mesh before the
+    consumer runs.
     """
 
-    def __init__(self, name: str = "job", scheduler: JobScheduler | None = None):
+    def __init__(self, name: str = "job", scheduler: JobScheduler | None = None,
+                 group=None, gang: int | None = None):
         self.name = name
         self.scheduler = scheduler or default_scheduler()
+        self.group = group
+        self.gang = gang
+        self._rr = 0  # round-robin dealer for gang=n
         self.tasks: list[JobTask] = []
         self.futures: list[IFuture] = []
         self.memo: dict = {}  # TaskNode -> list[Block], shared across tasks
@@ -419,12 +499,15 @@ class IJob:
         po, co = getattr(node, "owner", None), getattr(consumer, "owner", None)
         return po is not None and co is not None and po is not co
 
-    def _dep_tasks(self, root) -> list[JobTask]:
+    def _dep_tasks(self, root, group=None) -> list[JobTask]:
         """Job tasks for every boundary node reachable from ``root`` without
         crossing another boundary (those become the boundary task's deps).
         Traversal stops at materialised nodes: evaluation never descends
         below them, so ancestors (including native apps with side effects)
-        must not be scheduled or re-executed."""
+        must not be scheduled or re-executed. ``group`` is the submitting
+        branch's communicator — threaded as a parameter, not instance
+        state, so concurrent submissions into one job cannot mis-pin each
+        other's boundary tasks."""
         deps, stack, seen = [], [root], {root}
         while stack:
             n = stack.pop()
@@ -435,53 +518,119 @@ class IJob:
                 if self._materialised(p):
                     continue
                 if self._is_boundary(p, n):
-                    deps.append(self._node_task(p))
+                    deps.append(self._node_task(p, group))
                 else:
                     stack.append(p)
         return deps
 
-    def _node_task(self, node) -> JobTask:
-        """The (deduplicated) job task materialising ``node`` on its owner."""
+    def _task_memo(self, task: JobTask) -> dict:
+        """The evaluation memo for one task, with inter-group reshard edges
+        applied: any dep that ran on a DIFFERENT communicator leaves its
+        blocks committed to that sub-mesh; device_put copies onto this
+        task's communicator (the worker's base mesh for ungrouped tasks)
+        live in a task-LOCAL overlay, never the shared memo — two groups
+        consuming one producer must not race each other's placements (each
+        would otherwise read blocks mid-flight on the other's slice). New
+        materialisations still write through to the shared memo.
+
+        Caveat: a ``cache()``d dep short-circuits on ``node.result`` inside
+        the engine BEFORE the memo, bypassing the overlay — its consumers
+        read the blocks where they were cached (wide stages still re-place
+        them via the shuffle manager's ingress; narrow stages follow the
+        cached placement). Cross-group sharing of explicitly cached frames
+        trades slice isolation for the cache hit."""
+        worker = task.worker
+        if worker is None or not hasattr(worker, "_base_context"):
+            return self.memo
+        from repro.core.partition import place_block
+
+        tgt = task.group if task.group is not None else worker._base_context
+        overlay: dict = {}
+        moved = 0
+        for d in task.deps:
+            if d.node is None or d.group is task.group:
+                continue
+            blocks = self.memo.get(d.node)
+            if not blocks:
+                continue
+            overlay[d.node] = [place_block(b, tgt.mesh, tgt.axis) for b in blocks]
+            moved += len(blocks)
+        if not overlay:
+            return self.memo
+        with self.scheduler._lock:
+            self.scheduler.stats["group_reshards"] += moved
+        return _TaskMemo(self.memo, overlay)
+
+    def _node_task(self, node, group=None) -> JobTask:
+        """The (deduplicated) job task materialising ``node`` on its owner.
+        A node shared by two branches keeps the group of whichever branch
+        created its task first; later consumers in other groups get an
+        inter-group reshard edge instead."""
         t = self._node_tasks.get(node)
         if t is not None:
             return t
         worker = getattr(node, "owner", None)
-        deps = self._dep_tasks(node)
-        memo = self.memo
+        deps = self._dep_tasks(node, group)
+        t = JobTask(f"{node.op}#{node.id}", self._task_kind(node), worker, None,
+                    deps, group=group, node=node)
 
-        def fn(_node=node, _worker=worker):
-            return _worker.engine.evaluate(_node, memo=memo)
+        def fn(_node=node, _worker=worker, _t=t):
+            return _worker.engine.evaluate(_node, memo=self._task_memo(_t))
 
-        t = JobTask(f"{node.op}#{node.id}", self._task_kind(node), worker, fn, deps)
+        t.fn = fn
         self._node_tasks[node] = t
         self.tasks.append(t)
         self.scheduler.submit(t)
         return t
 
     # ---- submission ----------------------------------------------------
-    def submit_action(self, frame, name: str, blocks_fn=None, task_fn=None) -> IFuture:
+    def _next_group(self, worker, group):
+        """The communicator for this submission: explicit ``group=`` wins,
+        then the job-wide group, then the gang round-robin dealer, then the
+        DRIVER thread's own ``use_group`` binding — an action submitted
+        inside ``with worker.use_group(g):`` must execute on ``g`` even
+        though it runs on a pool thread, not the driver thread."""
+        if group is not None:
+            return group
+        if self.group is not None:
+            return self.group
+        if self.gang and worker is not None and hasattr(worker, "groups"):
+            gs = worker.groups(self.gang)
+            g = gs[self._rr % len(gs)]
+            self._rr += 1
+            return g
+        if worker is not None and hasattr(worker, "_ctx_local"):
+            return getattr(worker._ctx_local, "ctx", None)
+        return None
+
+    def submit_action(self, frame, name: str, blocks_fn=None, task_fn=None,
+                      group=None) -> IFuture:
         """Schedule an action over ``frame``'s lineage; returns its future.
 
         ``blocks_fn(blocks)`` maps the materialised root blocks to the
         action result; alternatively ``task_fn(memo)`` takes over the whole
-        evaluation (early-exit actions like ``take``).
-        """
+        evaluation (early-exit actions like ``take``). ``group`` pins this
+        submission (and the boundary tasks it creates) onto a communicator
+        group."""
         node, worker = frame.node, frame.worker
+        gsel = self._next_group(worker, group)
         if self._materialised(node):
             deps = []  # evaluation short-circuits at the root
         elif self._is_boundary(node, node):  # native/reshard root: own task
-            deps = [self._node_task(node)]
+            deps = [self._node_task(node, gsel)]
         else:
-            deps = self._dep_tasks(node)
-        memo = self.memo
+            deps = self._dep_tasks(node, gsel)
+        t = JobTask(f"{name}({node.op}#{node.id})", "action", worker, None, deps,
+                    group=gsel)
 
-        def fn():
+        def fn(_t=t):
+            memo = self._task_memo(_t)
             if task_fn is not None:
                 return task_fn(memo)
             blocks = worker.engine.evaluate(node, memo=memo)
             return blocks_fn(blocks)
 
-        t = JobTask(f"{name}({node.op}#{node.id})", "action", worker, fn, deps)
+        t.fn = fn
         self.tasks.append(t)
         self.scheduler.submit(t)
         fut = IFuture(t)
@@ -518,6 +667,9 @@ class IJob:
             "native": sum(1 for t in self.tasks if t.kind == "native"),
             "reshard": sum(1 for t in self.tasks if t.kind == "reshard"),
             "stage": sum(1 for t in self.tasks if t.kind == "stage"),
+            "gang": sum(1 for t in self.tasks if t.group is not None),
+            "groups": sorted({t.group.label() for t in self.tasks
+                              if t.group is not None}),
             "done": by_state.get(DONE, 0),
             "failed": by_state.get(FAILED, 0),
             "workers": sorted({t.worker.name for t in self.tasks if t.worker}),
@@ -526,15 +678,16 @@ class IJob:
 
     def explain(self) -> str:
         """Render the job DAG: one line per task with kind, owning worker,
-        dependencies, state and duration — the cross-worker complement of
-        ``df.explain()``'s per-lineage physical plan."""
+        communicator group, dependencies, state and duration — the
+        cross-worker complement of ``df.explain()``'s per-lineage plan."""
         lines = [f"== job {self.name!r} ({len(self.tasks)} tasks) =="]
         for t in sorted(self.tasks, key=lambda t: t.id):
             deps = ",".join(f"t{d.id}" for d in t.deps) or "-"
             wname = t.worker.name if t.worker is not None else "?"
+            gname = f"  group={t.group.label()}" if t.group is not None else ""
             dur = f"{t.duration_ms:.1f}ms" if t.t_end else ""
             lines.append(
-                f"  t{t.id} {t.kind}:{t.name}  worker={wname}  "
+                f"  t{t.id} {t.kind}:{t.name}  worker={wname}{gname}  "
                 f"deps=[{deps}]  {t.state} {dur}".rstrip()
             )
         return "\n".join(lines)

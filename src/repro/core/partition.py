@@ -89,9 +89,48 @@ def to_host(block: Block):
     return out
 
 
+def block_devices(block: Block):
+    """The device set a Block is committed to (None for host/uncommitted)."""
+    leaf = jax.tree.leaves(block.data)[0]
+    sharding = getattr(leaf, "sharding", None)
+    if sharding is None:
+        return None
+    try:
+        return frozenset(sharding.device_set)
+    except Exception:  # pragma: no cover — non-addressable / exotic shardings
+        return None
+
+
+def place_block(block: Block, mesh, axis: str) -> Block:
+    """Reshard a Block onto ``mesh`` rows-over-``axis`` — the inter-group
+    reshard edge (docs/collectives.md): sub-mesh → sub-mesh device_put, a
+    no-op when the block is already resident there."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rows = NamedSharding(mesh, P(axis))
+
+    def put(x):
+        return jax.device_put(x, rows)
+
+    return Block(jax.tree.map(put, block.data), put(block.valid))
+
+
 def concat_blocks(blocks: list[Block]) -> Block:
     if len(blocks) == 1:
         return blocks[0]
+    # blocks produced under different communicators (union of two group
+    # results) cannot concatenate directly — commit stragglers to the first
+    # block's devices first (jnp.concatenate rejects mixed device sets)
+    ref = block_devices(blocks[0])
+    if ref is not None and any(block_devices(b) not in (None, ref) for b in blocks[1:]):
+        ref_data, ref_valid = blocks[0].data, blocks[0].valid
+        blocks = [blocks[0]] + [
+            Block(
+                jax.tree.map(lambda x, r: jax.device_put(x, r.sharding), b.data, ref_data),
+                jax.device_put(b.valid, ref_valid.sharding),
+            )
+            for b in blocks[1:]
+        ]
     data = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *[b.data for b in blocks])
     valid = jnp.concatenate([b.valid for b in blocks], axis=0)
     return Block(data, valid)

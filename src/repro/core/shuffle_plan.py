@@ -31,6 +31,7 @@ checks, capacity-memory hits, wide-plan compiles, bytes moved) — surfaced via
 """
 from __future__ import annotations
 
+import threading
 import types
 from collections import OrderedDict
 from typing import Callable
@@ -39,7 +40,7 @@ import jax
 import numpy as np
 
 from repro.core import shuffle as sh
-from repro.core.partition import Block, block_aval as _block_aval
+from repro.core.partition import Block, block_aval as _block_aval, block_devices, place_block
 
 
 class _Opaque(Exception):
@@ -144,10 +145,14 @@ class ShuffleManager:
     MAX_ATTEMPTS = 8  # join retry bound (capacity + fan-out combined)
     MEMORY_ENTRIES = 4096  # capacity/fan-out memory cap (FIFO eviction)
 
-    def __init__(self, ctx, *, capacity_factor: float = 2.0,
+    def __init__(self, ctx, *, worker=None, capacity_factor: float = 2.0,
                  join_max_matches: int = 8, plan_cache_size: int = 64,
                  headroom: float = 1.25):
-        self.ctx = ctx
+        # with a worker, the manager follows the worker's CURRENT context —
+        # a gang-scheduled task (core/job.py) swaps in a group communicator
+        # and every wide stage runs on the group's sub-mesh and axis
+        self._ctx = ctx
+        self._worker = worker
         self.default_factor = float(capacity_factor)
         self.join_max_matches = int(join_max_matches)
         self.plan_cache_size = int(plan_cache_size)
@@ -155,6 +160,12 @@ class ShuffleManager:
         self._capacity: "OrderedDict[tuple, float]" = OrderedDict()
         self._fanout: "OrderedDict[tuple, int]" = OrderedDict()
         self._plans: "OrderedDict[tuple, Callable]" = OrderedDict()
+        # gang-scheduled tasks on disjoint groups share this manager from
+        # several threads; LRU get+move / insert+evict, the capacity/fanout
+        # memories, and the stats counters (CI-gated by check_bench.py —
+        # a lost `overflow_retries` increment could mask a regression) all
+        # need their read-modify-write sequences kept atomic
+        self._plan_lock = threading.Lock()
         self.stats = {
             "exchanges": 0,            # collective exchange stages executed
             "overflow_retries": 0,     # capacity retries (recompile + rerun)
@@ -166,7 +177,31 @@ class ShuffleManager:
             "wide_plan_misses": 0,     # wide-stage compiles
             "wide_plan_evictions": 0,
             "bytes_moved": 0,          # exchanged-buffer bytes (estimate)
+            "group_reshards": 0,       # blocks moved onto a different communicator
         }
+
+    # ------------------------------------------------------------------
+    # communicator binding
+    # ------------------------------------------------------------------
+    @property
+    def ctx(self):
+        return self._worker.context if self._worker is not None else self._ctx
+
+    def _bump(self, key: str, n: int = 1):
+        with self._plan_lock:
+            self.stats[key] += n
+
+    def _placed(self, b: Block) -> Block:
+        """Commit a block to the active communicator's mesh before a wide
+        stage — the ingress half of the inter-group reshard edge. A block
+        produced on the world mesh (or another group's sub-mesh) is
+        device_put onto this communicator; resident blocks pass through."""
+        ctx = self.ctx
+        devs = block_devices(b)
+        if devs is not None and devs != frozenset(ctx.mesh.devices.flat):
+            self._bump("group_reshards")
+            return place_block(b, ctx.mesh, ctx.axis)
+        return b
 
     # ------------------------------------------------------------------
     # capacity memory
@@ -176,18 +211,22 @@ class ShuffleManager:
         return self.ctx.executors
 
     def _factor(self, sig, rows) -> float:
-        f = self._capacity.get((sig, rows))
-        if f is not None:
-            self.stats["capacity_memory_hits"] += 1
-            return f
-        self.stats["capacity_memory_misses"] += 1
-        return self.default_factor
+        with self._plan_lock:
+            f = self._capacity.get((sig, rows, self.p))
+            if f is not None:
+                self.stats["capacity_memory_hits"] += 1
+                return f
+            self.stats["capacity_memory_misses"] += 1
+            return self.default_factor
 
     def _remember(self, sig, rows, factor: float):
-        mem = self._capacity
-        mem[(sig, rows)] = factor
-        while len(mem) > self.MEMORY_ENTRIES:
-            mem.popitem(last=False)
+        # keyed per communicator size: the fitting factor on a p=4 group is
+        # not the fitting factor on the p=8 world for the same lineage
+        with self._plan_lock:
+            mem = self._capacity
+            mem[(sig, rows, self.p)] = factor
+            while len(mem) > self.MEMORY_ENTRIES:
+                mem.popitem(last=False)
 
     def _fit(self, fill: int, n_local: int) -> float:
         """Capacity factor sized from observed bucket demand, with headroom,
@@ -199,23 +238,27 @@ class ShuffleManager:
     # wide-plan cache (compiled stage kernels; analogue of DESIGN.md §5)
     # ------------------------------------------------------------------
     def _plan(self, key: tuple, builder: Callable[[], Callable]):
-        fn = self._plans.get(key)
-        if fn is not None:
-            self._plans.move_to_end(key)
-            self.stats["wide_plan_hits"] += 1
-            return fn
-        self.stats["wide_plan_misses"] += 1
+        with self._plan_lock:
+            fn = self._plans.get(key)
+            if fn is not None:
+                self._plans.move_to_end(key)
+                self.stats["wide_plan_hits"] += 1
+                return fn
+            self.stats["wide_plan_misses"] += 1
         fn = jax.jit(builder())
-        self._plans[key] = fn
-        while len(self._plans) > self.plan_cache_size:
-            self._plans.popitem(last=False)
-            self.stats["wide_plan_evictions"] += 1
+        with self._plan_lock:
+            self._plans[key] = fn
+            while len(self._plans) > self.plan_cache_size:
+                self._plans.popitem(last=False)
+                self.stats["wide_plan_evictions"] += 1
         return fn
 
     def _account(self, b: Block, C: int):
-        if self.p > 1:
-            self.stats["exchanges"] += 1
-            self.stats["bytes_moved"] += self.p * self.p * C * _row_bytes(b)
+        p = self.p
+        if p > 1:
+            with self._plan_lock:
+                self.stats["exchanges"] += 1
+                self.stats["bytes_moved"] += p * p * C * _row_bytes(b)
 
     def _adaptive(self, sig, rows, n_local: int, run) -> tuple:
         """The shared capacity sequence for single-exchange wide ops:
@@ -226,10 +269,10 @@ class ShuffleManager:
         factor = self._factor(sig, rows)
         out, ovf, fill = run(sh.capacity_for(factor, n_local, self.p))
         if self.p > 1:
-            self.stats["overflow_checks"] += 1
+            self._bump("overflow_checks")
             n_ovf, n_fill = (int(x) for x in jax.device_get((ovf, fill)))
             if n_ovf > 0:
-                self.stats["overflow_retries"] += 1
+                self._bump("overflow_retries")
                 factor = self._fit(n_fill, n_local)
                 out, _, _ = run(sh.capacity_for(factor, n_local, self.p))
         self._remember(sig, rows, factor)
@@ -239,6 +282,7 @@ class ShuffleManager:
     # sort-routed wide ops (sort / distinct / reduceByKey / groupByKey)
     # ------------------------------------------------------------------
     def _sorted(self, sig, b: Block, key_fn, ascending: bool, post, kind: tuple) -> Block:
+        b = self._placed(b)
         rows = b.capacity
         n_local = rows // max(self.p, 1)
         data, valid = self._adaptive(
@@ -247,8 +291,11 @@ class ShuffleManager:
         return Block(data, valid)
 
     def _run_sort_stage(self, kind, C, b, key_fn, ascending, post):
-        key = (kind, C, ascending, fn_token(key_fn), _block_aval(b))
         ctx = self.ctx
+        # the mesh is part of the key: a stage traced for a p=4 group closes
+        # over that group's communicator and must never serve the world (or
+        # another group with a different device set)
+        key = (kind, C, ascending, fn_token(key_fn), _block_aval(b), ctx.mesh)
 
         def builder():
             def run(data, valid):
@@ -284,6 +331,7 @@ class ShuffleManager:
     # hash-routed wide ops (partitionBy)
     # ------------------------------------------------------------------
     def partition_by(self, sig, b: Block, key_fn) -> Block:
+        b = self._placed(b)
         rows = b.capacity
         n_local = rows // max(self.p, 1)
         data, valid = self._adaptive(
@@ -291,8 +339,8 @@ class ShuffleManager:
         return Block(data, valid)
 
     def _run_hash_stage(self, C, b, key_fn):
-        key = (("partitionBy",), C, fn_token(key_fn), _block_aval(b))
         ctx = self.ctx
+        key = (("partitionBy",), C, fn_token(key_fn), _block_aval(b), ctx.mesh)
 
         def builder():
             def run(data, valid):
@@ -309,18 +357,20 @@ class ShuffleManager:
     # join (both-side exchange + bounded-fan-out merge, one stage)
     # ------------------------------------------------------------------
     def join(self, sig, lb: Block, rb: Block, max_matches: int) -> Block:
+        lb, rb = self._placed(lb), self._placed(rb)
         p = self.p
         nl, nr = lb.capacity, rb.capacity
         nl_local, nr_local = nl // max(p, 1), nr // max(p, 1)
         factor = self._factor(sig, (nl, nr))
-        M = self._fanout.get((sig, nl, nr), max_matches)
+        with self._plan_lock:
+            M = self._fanout.get((sig, nl, nr, p), max_matches)
         ctx = self.ctx
         attempts = 0
         while True:
             attempts += 1
             Cl = sh.capacity_for(factor, nl_local, p)
             Cr = sh.capacity_for(factor, nr_local, p)
-            key = (("join", M), Cl, Cr, _block_aval(lb), _block_aval(rb))
+            key = (("join", M), Cl, Cr, _block_aval(lb), _block_aval(rb), ctx.mesh)
 
             def builder(Cl=Cl, Cr=Cr, M=M):
                 def run(ld, lv, rd, rv):
@@ -335,7 +385,7 @@ class ShuffleManager:
                 self._account(rb, Cr)
             rows, ok, eovf, lfill, rfill, fovf = fn(lb.data, lb.valid, rb.data, rb.valid)
             # one deferred check covers both exchanges AND the fan-out bound
-            self.stats["overflow_checks"] += 1
+            self._bump("overflow_checks")
             n_e, n_lf, n_rf, n_f = (int(x) for x in jax.device_get(
                 (eovf, lfill, rfill, fovf)))
             if n_e == 0 and n_f == 0:
@@ -348,15 +398,16 @@ class ShuffleManager:
                     f"(exchange_overflow={n_e}, fanout_overflow={n_f}, M={M}): "
                     f"raise max_matches / ignis.join.max.matches for this key skew")
             if n_e > 0:
-                self.stats["overflow_retries"] += 1
+                self._bump("overflow_retries")
                 factor = max(self._fit(n_lf, nl_local), self._fit(n_rf, nr_local))
             else:
-                self.stats["fanout_retries"] += 1
+                self._bump("fanout_retries")
                 M *= 2
         self._remember(sig, (nl, nr), factor)
-        self._fanout[(sig, nl, nr)] = M
-        while len(self._fanout) > self.MEMORY_ENTRIES:
-            self._fanout.popitem(last=False)
+        with self._plan_lock:
+            self._fanout[(sig, nl, nr, p)] = M
+            while len(self._fanout) > self.MEMORY_ENTRIES:
+                self._fanout.popitem(last=False)
         return Block(rows, ok)
 
     # ------------------------------------------------------------------
@@ -367,7 +418,7 @@ class ShuffleManager:
         sig = getattr(node, "shuffle_sig", None)
         if sig is None:
             return ""
-        factors = [f for (s, _), f in self._capacity.items() if s == sig]
+        factors = [f for (s, _rows, _p), f in self._capacity.items() if s == sig]
         if factors:
             return f" {{shuffle: capacity_factor={factors[-1]:.2f} (memory)}}"
         return f" {{shuffle: capacity_factor={self.default_factor:.2f} (cold)}}"
@@ -381,5 +432,6 @@ class ShuffleManager:
             f"capacity_memory: hits={s['capacity_memory_hits']} "
             f"misses={s['capacity_memory_misses']} entries={len(self._capacity)}\n"
             f"wide plans: compiled={s['wide_plan_misses']} hits={s['wide_plan_hits']} "
-            f"evictions={s['wide_plan_evictions']} bytes_moved={s['bytes_moved']}"
+            f"evictions={s['wide_plan_evictions']} bytes_moved={s['bytes_moved']} "
+            f"group_reshards={s['group_reshards']}"
         )

@@ -111,6 +111,86 @@ def main():
         np.asarray(y).reshape(8, 2), np.roll(np.arange(16).reshape(8, 2), 1, axis=0)))
     a2a = comm.alltoall(ctx, comm.shard_rows(ctx, jnp.arange(64, dtype=jnp.int32)))
     check("alltoall_shape", np.asarray(a2a).shape == (64,))
+    try:
+        comm.alltoall(ctx, comm.shard_rows(ctx, jnp.arange(24, dtype=jnp.int32)))
+        check("alltoall_indivisible_raises", False)
+    except ValueError:
+        check("alltoall_indivisible_raises", True)
+
+    # ---- communicator groups (MPI_Comm_split over the mesh) ----------------
+    g0, g1 = ctx.split(2)
+    check("split_sizes", g0.executors == 4 and g1.executors == 4)
+    check("split_disjoint_devices",
+          not (set(g0.mesh.devices.flat) & set(g1.mesh.devices.flat)))
+    # collectives inside a group must not leak across the boundary: each
+    # group allreduces ITS residents only
+    x0 = comm.shard_rows(g0, jnp.arange(8, dtype=jnp.float32))         # 0..7
+    x1 = comm.shard_rows(g1, jnp.arange(8, 16, dtype=jnp.float32))     # 8..15
+    check("group_allreduce_isolated",
+          float(comm.allreduce(g0, x0)) == 28.0
+          and float(comm.allreduce(g1, x1)) == 92.0)
+    check("group_gather_local",
+          np.array_equal(np.asarray(comm.gather(g1, x1)),
+                         np.arange(8, 16, dtype=np.float32)))
+    # world collectives are untouched by the existence of groups
+    check("world_allreduce_after_split",
+          float(comm.allreduce(ctx, comm.shard_rows(ctx, jnp.arange(16, dtype=jnp.float32))))
+          == 120.0)
+    # inter-group reshard edge: a group collective accepts blocks committed
+    # to the OTHER group (device_put sub-mesh -> sub-mesh)
+    check("intergroup_reshard_collective",
+          float(comm.allreduce(g1, x0)) == 28.0)
+    # nested split: a group is itself splittable
+    n0, n1 = g0.split(2)
+    check("nested_split", n0.executors == 2
+          and float(comm.allreduce(n0, comm.shard_rows(n0, jnp.arange(4, dtype=jnp.float32)))) == 6.0)
+
+    # ---- gang-scheduled concurrent jobs on disjoint groups -----------------
+    from repro.core.job import IJob as _IJob
+
+    wg = IWorker(w.cluster, "python")
+    gg0, gg1 = wg.groups(2)
+    vals_g = rng.integers(0, 10_000, 1024).astype(np.int32)
+    jobA = _IJob("gangA", group=gg0)
+    jobB = _IJob("gangB", group=gg1)
+    fA = wg.parallelize(vals_g).sort().collect_async(job=jobA)
+    kvg = wg.parallelize(vals_g).map(lambda x: {"key": x % 11, "value": jnp.int32(1)})
+    fB = kvg.reduce_by_key(lambda a, b: a + b, 0).collect_async(job=jobB)
+    check("gang_sort_on_group",
+          [int(x) for x in fA.result(120)] == sorted(int(v) for v in vals_g))
+    counts_g = {int(np.asarray(r["key"])): int(np.asarray(r["value"]))
+                for r in fB.result(120)}
+    exp_g = {}
+    for v in vals_g:
+        exp_g[int(v) % 11] = exp_g.get(int(v) % 11, 0) + 1
+    check("gang_rbk_on_group", counts_g == exp_g)
+    check("gang_jobs_tagged",
+          jobA.stats()["groups"] == ["data[0:4]"]
+          and jobB.stats()["groups"] == ["data[4:8]"])
+    check("gang_group_reshards", wg.shuffle_stats()["group_reshards"] >= 2)
+    check("gang_tasks_counted",
+          jobA.scheduler.stats["gang_tasks"] >= 2)
+    # a driver-thread use_group binding rides along into the submission
+    with wg.use_group(gg0):
+        fbind = wg.parallelize(vals_g).sort().collect_async()
+    check("driver_binding_propagates",
+          fbind.task.group is gg0
+          and [int(x) for x in fbind.result(120)] == sorted(int(v) for v in vals_g))
+    # native app on a subset of executors (paper Fig. 9): the bound context
+    # inside the app IS the group communicator
+    from repro.core.native import ignis_export
+
+    wsg = IWorker(w.cluster, "spmd")
+    h0, _h1 = wsg.groups(2)
+
+    @ignis_export("mesh_probe")
+    def mesh_probe(ctx_, data=None, valid=None):
+        assert ctx_.executors == 4, ctx_.executors
+        return data, valid
+
+    probe = wsg.call("mesh_probe", wsg.parallelize(np.arange(32, dtype=np.int32)))
+    got_probe = probe.collect_async(group=h0).result(120)
+    check("native_on_subset", [int(x) for x in got_probe] == list(range(32)))
 
     # ---- native HPC apps at p=8 --------------------------------------------
     from repro.apps.stencil import cg_native, laplacian_matvec_ref

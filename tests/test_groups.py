@@ -1,0 +1,209 @@
+"""Communicator groups (docs/collectives.md): ``IContext.split``/``group``
+edge cases, the gang-scheduled job path, and the ``comm.alltoall``
+validation fix — everything that is testable at p=1 (the 8-way isolation
+and concurrency checks live in tests/_distributed_main.py)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ICluster, IProperties, IWorker
+from repro.core import comm
+from repro.core.job import IJob
+from repro.core.native import ignis_export
+
+
+@pytest.fixture
+def worker():
+    return IWorker(ICluster(IProperties()), "python")
+
+
+# ---------------------------------------------------------------------------
+# split / group construction
+# ---------------------------------------------------------------------------
+
+
+def test_split_p1(worker):
+    """split(1) on a single-executor world is the degenerate but legal
+    MPI_Comm_split: one group spanning the whole mesh."""
+    ctx = worker.context
+    (g,) = ctx.split(1)
+    assert g.is_group and g.parent is ctx
+    assert g.executors == 1 and g.group_ranks == (0,)
+    assert g.axis == ctx.axis
+
+
+def test_split_uneven_rejected(worker):
+    ctx = worker.context
+    with pytest.raises(ValueError, match="does not divide"):
+        ctx.split(2)  # p=1 cannot split 2 ways
+    with pytest.raises(ValueError, match="n_groups"):
+        ctx.split(0)
+
+
+def test_group_rank_validation(worker):
+    ctx = worker.context
+    with pytest.raises(ValueError, match="at least one"):
+        ctx.group([])
+    with pytest.raises(ValueError, match="distinct"):
+        ctx.group([0, 0])
+    with pytest.raises(ValueError, match="out of range"):
+        ctx.group([0, 1])  # p=1 has no rank 1
+
+
+def test_nested_split(worker):
+    ctx = worker.context
+    (g,) = ctx.split(1)
+    (gg,) = g.split(1)
+    assert gg.parent is g and g.parent is ctx
+    assert gg.executors == 1
+    assert gg.label() == "data[0:1][0:1]"
+
+
+def test_group_inherits_vars(worker):
+    ctx = worker.context
+    ctx.set_var("alpha", 3)
+    (g,) = ctx.split(1)
+    assert g.var("alpha") == 3
+    # snapshot, not a live view
+    ctx.set_var("alpha", 4)
+    assert g.var("alpha") == 3
+    # bind() keeps group identity
+    b = g.bind({"beta": 1})
+    assert b.is_group and b.group_ranks == (0,)
+
+
+def test_worker_groups_cached_and_locked(worker):
+    gs1 = worker.groups(1)
+    gs2 = worker.groups(1)
+    assert gs1 is gs2
+    assert worker.group_lock(gs1[0]) is worker.group_lock(gs1[0])
+
+
+def test_use_group_thread_local_binding(worker):
+    base = worker.context
+    (g,) = worker.groups(1)
+    with worker.use_group(g):
+        assert worker.context is g
+        with worker.use_group(None):  # nested rebind to the base mesh
+            assert worker.context is base
+        assert worker.context is g
+    assert worker.context is base
+
+
+# ---------------------------------------------------------------------------
+# comm fixes: alltoall validation + dead helper removal
+# ---------------------------------------------------------------------------
+
+
+class _FakeCtx:
+    """Shape-validation happens before any mesh work, so a bare stand-in
+    exercises the error path without needing multiple devices."""
+
+    executors = 4
+    axis = "data"
+
+
+def test_alltoall_rejects_indivisible_rows():
+    with pytest.raises(ValueError, match="divisible"):
+        comm.alltoall(_FakeCtx(), jnp.arange(6, dtype=jnp.int32))
+    with pytest.raises(ValueError, match="divisible"):
+        # total divides p but the local count does not (8/4 = 2, 2 % 4 != 0)
+        comm.alltoall(_FakeCtx(), jnp.arange(8, dtype=jnp.int32))
+
+
+def test_alltoall_p1_roundtrip(worker):
+    x = comm.shard_rows(worker.context, jnp.arange(5, dtype=jnp.int32))
+    assert np.array_equal(np.asarray(comm.alltoall(worker.context, x)),
+                          np.arange(5))
+
+
+def test_dead_cached_jit_removed():
+    assert not hasattr(comm, "_cached_jit")
+
+
+# ---------------------------------------------------------------------------
+# gang-scheduled jobs (p=1 degenerate groups; concurrency is p=8-only)
+# ---------------------------------------------------------------------------
+
+
+def test_gang_job_results_match_eager(worker):
+    vals = np.random.default_rng(0).integers(0, 100, 64).astype(np.int32)
+    df = worker.parallelize(vals).map(lambda x: x + 1)
+    job = IJob("gang1", gang=1)
+    f1 = df.count_async(job=job)
+    f2 = worker.parallelize(vals).sort().collect_async(job=job)
+    assert f1.result(30) == 64
+    assert [int(x) for x in f2.result(30)] == sorted(int(v) + 0 for v in vals)
+    st = job.stats()
+    assert st["gang"] == st["tasks"] and st["failed"] == 0
+    assert st["groups"] == ["data[0:1]"]
+    assert "group=data[0:1]" in job.explain()
+
+
+def test_explicit_group_submission(worker):
+    g = worker.context.group([0])
+    vals = np.arange(32, dtype=np.int32)
+    fut = worker.parallelize(vals).map(lambda x: x * 2).collect_async(group=g)
+    assert [int(x) for x in fut.result(30)] == [2 * v for v in range(32)]
+
+
+def test_gang_scheduler_stats(worker):
+    sched = IJob("probe").scheduler
+    g0 = sched.stats["gang_tasks"]
+    job = IJob("gang-stats", gang=1)
+    worker.parallelize(np.arange(8, dtype=np.int32)).count_async(job=job).result(30)
+    assert sched.stats["gang_tasks"] > g0
+
+
+def test_group_job_failure_cascade(worker):
+    """A native task failing on a group fails its dependents with the same
+    error, without running them (the group-scheduled cascade)."""
+
+    @ignis_export("groups_boom")
+    def groups_boom(ctx, data=None, valid=None):
+        raise RuntimeError("groups_boom")
+
+    job = IJob("gang-fail", gang=1)
+    bad = worker.call("groups_boom", worker.parallelize(np.arange(4, dtype=np.int32)))
+    f1 = bad.count_async(job=job)
+    f2 = bad.map(lambda x: x).collect_async(job=job)
+    with pytest.raises(RuntimeError, match="groups_boom"):
+        f1.result(30)
+    with pytest.raises(RuntimeError, match="groups_boom"):
+        f2.result(30)
+    st = job.stats()
+    assert st["failed"] >= 2 and st["done"] == 0
+
+
+def test_wide_ops_under_group_binding(worker):
+    """Wide stages consult the ACTIVE communicator: under a group binding
+    the shuffle manager keys its capacity memory and plans per-group."""
+    vals = np.random.default_rng(1).integers(0, 50, 64).astype(np.int32)
+    (g,) = worker.groups(1)
+    with worker.use_group(g):
+        got = worker.parallelize(vals).map(
+            lambda x: {"key": x % 5, "value": jnp.int32(1)}
+        ).reduce_by_key(lambda a, b: a + b, 0).collect()
+    exp = {}
+    for v in vals:
+        exp[int(v) % 5] = exp.get(int(v) % 5, 0) + 1
+    assert {int(np.asarray(r["key"])): int(np.asarray(r["value"])) for r in got} == exp
+
+
+def test_driver_binding_propagates_to_submissions(worker):
+    """An action submitted inside ``with worker.use_group(g):`` must run
+    ON ``g`` even though it executes on a pool thread: the submission
+    inherits the driver thread's binding as its task group."""
+    (g,) = worker.groups(1)
+    df = worker.parallelize(np.arange(16, dtype=np.int32))
+    with worker.use_group(g):
+        fut = df.count_async()
+    assert fut.task.group is g
+    assert fut.result(30) == 16
+    # outside the binding, submissions are ungrouped again
+    assert df.count_async().task.group is None
+    # explicit group= still wins over the ambient binding
+    other = worker.context.group([0])
+    with worker.use_group(g):
+        fut2 = df.count_async(group=other)
+    assert fut2.task.group is other and fut2.result(30) == 16
