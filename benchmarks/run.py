@@ -36,6 +36,7 @@ SMOKE_KWARGS = {
     "minebench": {},
     "hybrid": {"n": 1 << 14, "cg_iters": 100, "iters": 2},
     "groups": {"size": 2048, "cg_iters": 1000, "n": 1 << 10, "iters": 3},
+    "recovery": {"n": 20_000, "iters": 3},
 }
 
 BENCHES = [
@@ -48,6 +49,7 @@ BENCHES = [
     ("hpc_native", "benchmarks.bench_hpc_native"),
     ("hybrid", "benchmarks.bench_hybrid"),
     ("groups", "benchmarks.bench_groups"),
+    ("recovery", "benchmarks.bench_recovery"),
     ("sloc", "benchmarks.bench_sloc"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -14,8 +14,10 @@ the job-oriented driver layer (``IJob``/``IFuture``: every action submits
 into a cross-worker job DAG; eager actions are facades — docs/driver.md),
 communicator groups (``IContext.split``/``group`` = ``MPI_Comm_split``;
 ``IJob(group=...)`` gang-schedules jobs onto disjoint sub-meshes —
-docs/collectives.md), and the driver-round-trip "spark mode" baseline
-the paper compares against.
+docs/collectives.md), the unified fault-tolerance subsystem (``faults``:
+deterministic injection, scheduler retry, checkpoint-truncated repair,
+speculative stragglers — docs/fault_tolerance.md), and the
+driver-round-trip "spark mode" baseline the paper compares against.
 """
 from repro.core.properties import IProperties  # noqa: F401
 from repro.core.cluster import Ignis, ICluster, IWorker  # noqa: F401
@@ -24,3 +26,4 @@ from repro.core.context import IContext  # noqa: F401
 from repro.core.textlambda import ISource, text_lambda  # noqa: F401
 from repro.core.native import ignis_export  # noqa: F401
 from repro.core.job import IFuture, IJob, JobScheduler  # noqa: F401
+from repro.core.faults import FaultInjected, FaultPlan, Recoverable  # noqa: F401

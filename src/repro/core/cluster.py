@@ -18,6 +18,7 @@ import jax
 import numpy as np
 
 from repro.core import compat
+from repro.core import faults
 from repro.core.context import IContext
 from repro.core.dag import DagEngine, TaskNode, node_sig
 from repro.core.shuffle_plan import ShuffleManager
@@ -137,6 +138,14 @@ class IWorker:
         self._group_locks: "OrderedDict[int, tuple]" = OrderedDict()
         self._groups: dict[int, list[IContext]] = {}
         self._groups_guard = threading.Lock()
+        # fault tolerance (docs/fault_tolerance.md): executors reported lost
+        # (containers the resource manager reclaimed) and the registry of
+        # cached nodes whose blocks a lost executor takes with it. WeakSet:
+        # dropping every frame reference releases the lineage as before.
+        import weakref
+
+        self.executor_blacklist: set[int] = set()
+        self._cached_nodes = weakref.WeakSet()
         cluster.workers.append(self)
 
     _GROUP_LOCK_CAP = 256
@@ -184,6 +193,16 @@ class IWorker:
                 self._groups[n_groups] = gs
                 for g in gs:
                     self._group_locks[id(g)] = (g, threading.RLock(), True)
+            # the cache must not bypass the executor blacklist: a split built
+            # before a kill_executor would otherwise keep handing out groups
+            # over the lost rank while a fresh split raises. The cache itself
+            # survives — restore_executor() re-admits the same group objects.
+            lost = sorted({r for g in gs for r in g.group_ranks
+                           if r in self.executor_blacklist})
+            if lost:
+                raise ValueError(
+                    f"groups({n_groups}) spans blacklisted executors {lost} "
+                    f"(lost containers); restore_executor() to re-admit them")
             return gs
 
     def group_lock(self, ctx: IContext) -> threading.RLock:
@@ -203,6 +222,35 @@ class IWorker:
                             del self._group_locks[key]
                             break
             return entry[1]
+
+    # ------------------------------------------------------------------
+    # executor failure (paper §3.5: container loss + blacklist)
+    # ------------------------------------------------------------------
+    def _register_cached(self, node: TaskNode):
+        """Track a node holding materialised blocks (persist / parallelize /
+        checkpoint) so a simulated executor loss can take its shard."""
+        self._cached_nodes.add(node)
+
+    def kill_executor(self, rank: int, blacklist: bool = True) -> int:
+        """Simulate losing the container of executor ``rank``: every cached
+        node of this worker loses its ``rank``-th block (the paper's
+        partition-per-executor model — repair recomputes them from lineage
+        or restores them from a checkpoint on the next action), and the
+        rank is blacklisted so new communicator groups avoid it until
+        ``restore_executor``. Returns the number of blocks lost."""
+        killed = 0
+        for node in list(self._cached_nodes):
+            if (node.result is not None and rank < len(node.result)
+                    and node.result[rank] is not None):
+                DagEngine.kill_block(node, rank)
+                killed += 1
+        if blacklist:
+            self.executor_blacklist.add(int(rank))
+        return killed
+
+    def restore_executor(self, rank: int):
+        """Lift the blacklist for a recovered/replaced executor."""
+        self.executor_blacklist.discard(int(rank))
 
     # ------------------------------------------------------------------
     # introspection: stage compilation (DESIGN.md §5)
@@ -249,6 +297,7 @@ class IWorker:
         node = TaskNode("parallelize", [], fn=lambda _: blk, narrow=False)
         node.result = blk
         node.cached = True
+        self._register_cached(node)
         # structural source signature: re-parallelizing same-shaped data maps
         # to the same lineage signature (shuffle capacity memory, DESIGN.md §6)
         node.sig = ("src", tuple(block_aval(b) for b in blk))
@@ -290,6 +339,8 @@ class IWorker:
         src_worker = df.worker
 
         def fn(parent_results):
+            faults.check("reshard", kind="importData", src=src_worker.name,
+                         dst=self.name)
             out = []
             for b in parent_results[0]:
                 if self.mode == "spark" or src_worker.mode == "spark":
@@ -345,6 +396,7 @@ class IWorker:
         device_put here is the inter-group reshard edge for native tasks."""
         if not parent_results:
             return ()
+        faults.check("reshard", kind="native")
         b = place_block(concat_blocks(parent_results[0]), ctx.mesh, ctx.axis)
         return (b.data, b.valid)
 

@@ -79,6 +79,19 @@ class IContext:
         if bad:
             raise ValueError(
                 f"group() ranks {bad} out of range for {p} executors")
+        # executor blacklist (docs/fault_tolerance.md): a base-communicator
+        # group must not be built over a lost container — the scheduler
+        # routes new sub-clusters around blacklisted ranks until the worker
+        # restore_executor()s them. Nested groups use parent-relative ranks,
+        # so the guard applies at the base communicator only.
+        if self.parent is None and self.worker is not None:
+            lost = sorted(
+                r for r in ranks
+                if r in getattr(self.worker, "executor_blacklist", ()))
+            if lost:
+                raise ValueError(
+                    f"group() ranks {lost} are blacklisted (lost executors); "
+                    f"restore_executor() to re-admit them")
         dim = list(self.mesh.axis_names).index(self.axis)
         devs = np.take(np.asarray(self.mesh.devices), ranks, axis=dim)
         sub = IContext(

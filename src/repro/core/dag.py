@@ -26,6 +26,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro.core import faults
+
 _ids = itertools.count()
 
 
@@ -59,6 +61,11 @@ class TaskNode:
     # boundary; native nodes are always their own job task.
     owner: Optional[object] = None
     task_kind: str = "dataflow"
+    # checkpoint-aware lineage (docs/fault_tolerance.md): a per-block loader
+    # installed by IDataFrame.checkpoint(). When set, repair of a lost block
+    # reads it back from stable storage instead of walking parents — the
+    # node IS the truncation point of its lineage.
+    restore_fn: Optional[Callable] = None
     id: int = field(default_factory=lambda: next(_ids))
     # runtime state
     result: Optional[list] = None  # list[Block] when materialised
@@ -134,6 +141,8 @@ class DagEngine:
             "plan_cache_misses": 0,
             "plan_cache_evictions": 0,
             "iter_block_computes": 0,
+            "block_restores": 0,  # blocks repaired from a checkpoint
+            "speculative_retries": 0,  # straggler duplicates launched
         }
 
     # ---- planner (stage compilation) ----------------------------------------
@@ -311,6 +320,7 @@ class DagEngine:
         if stage is not None and not node.cached:
             out = []
             for pb in self.evaluate_blocks_iter(stage.head.parents[0], memo, plans):
+                faults.check("dag.block", op=stage.tail.op, block=len(out), fused=True)
                 self.stats["iter_block_computes"] += 1
                 data, valid = self._compiled(stage, pb)(pb.data, pb.valid)
                 b = Block(data, valid)
@@ -331,6 +341,7 @@ class DagEngine:
             iters = [self.evaluate_blocks_iter(p, memo, plans) for p in node.parents]
             out = []
             for parents_i in zip(*iters):
+                faults.check("dag.block", op=node.op, block=len(out), fused=False)
                 self.stats["iter_block_computes"] += 1
                 b = node.block_fn(list(parents_i))
                 out.append(b)
@@ -368,9 +379,12 @@ class DagEngine:
         self.stats["node_computes"] += 1
         if node.narrow and node.block_fn is not None:
             nblocks = len(parent_results[0]) if parent_results else 0
-            return [
-                node.block_fn([pr[i] for pr in parent_results]) for i in range(nblocks)
-            ]
+            out = []
+            for i in range(nblocks):
+                faults.check("dag.block", op=node.op, block=i, fused=False)
+                out.append(node.block_fn([pr[i] for pr in parent_results]))
+            return out
+        faults.check("dag.node", op=node.op)
         self.stats["wide_computes"] += 1
         return node.fn(parent_results)
 
@@ -381,7 +395,8 @@ class DagEngine:
 
         parent_blocks = self._eval(stage.head.parents[0], memo, plans)
         out = []
-        for b in parent_blocks:
+        for i, b in enumerate(parent_blocks):
+            faults.check("dag.block", op=stage.tail.op, block=i, fused=True)
             fn = self._compiled(stage, b)
             data, valid = fn(b.data, b.valid)
             out.append(Block(data, valid))
@@ -400,8 +415,19 @@ class DagEngine:
     def _repair(self, node: TaskNode, memo: dict, plans: dict | None = None):
         """Recompute only the missing blocks of a cached node (narrow lineage);
         wide nodes fall back to full recompute. A fused-stage tail repairs by
-        walking its constituent ops' block_fns — fusion never loses lineage."""
+        walking its constituent ops' block_fns — fusion never loses lineage.
+        A checkpointed node (``restore_fn``) repairs from stable storage:
+        lineage is truncated there, ancestors are never re-read."""
         plans = {} if plans is None else plans
+        if node.restore_fn is not None:
+            blocks = list(node.result)
+            for i, b in enumerate(blocks):
+                if b is None:
+                    faults.check("dag.repair", op=node.op, block=i)
+                    blocks[i] = node.restore_fn(i)
+                    self.stats["block_restores"] += 1
+            node.result = blocks
+            return blocks
         if not node.narrow or node.block_fn is None:
             node.result = None
             parent_results = [self._eval(p, memo, plans) for p in node.parents]
@@ -409,6 +435,7 @@ class DagEngine:
         blocks = list(node.result)
         for i, b in enumerate(blocks):
             if b is None:
+                faults.check("dag.repair", op=node.op, block=i)
                 parents_i = [self._parent_block(p, i, memo, plans) for p in node.parents]
                 blocks[i] = node.block_fn(parents_i)
                 self.stats["block_recomputes"] += 1
@@ -418,6 +445,12 @@ class DagEngine:
     def _parent_block(self, parent: TaskNode, i: int, memo: dict, plans: dict | None = None):
         if parent.result is not None and parent.result[i] is not None:
             return parent.result[i]
+        if parent.restore_fn is not None:
+            blk = parent.restore_fn(i)
+            self.stats["block_restores"] += 1
+            if parent.result is not None:
+                parent.result[i] = blk
+            return blk
         if parent.narrow and parent.block_fn is not None and parent.parents:
             blk = parent.block_fn(
                 [self._parent_block(gp, i, memo, plans) for gp in parent.parents]
@@ -441,34 +474,85 @@ class DagEngine:
             DagEngine.kill_block(n, i)
 
     # ---- straggler mitigation -------------------------------------------------
-    def evaluate_speculative(self, node: TaskNode, timeout_s: float = 30.0):
+    def evaluate_speculative(self, node: TaskNode, timeout_s: float = 30.0,
+                             memo: dict | None = None, bind=None):
         """Speculative re-execution of slow tasks (paper §3.5 recovery path,
         generalised to stragglers): evaluate with a deadline; a task that
         exceeds it is re-launched (deterministic winner: first completion).
+        The job scheduler applies this as the straggler policy for gang
+        tasks when ``ignis.task.speculative`` is set (core/job.py).
+
+        Each attempt evaluates through a private overlay of ``memo`` so the
+        duplicate never races the straggler's half-written entries; the
+        winner's materialisations are committed back to the shared memo.
+        ``bind`` (a context-manager factory) is entered by EVERY attempt
+        thread — thread-locals like the worker's active communicator do not
+        cross thread spawns, so a gang task must re-bind its group here or
+        its wide stages would silently retarget to the world mesh.
 
         On a single-process runtime the duplicate runs serially; on a real
         multi-host deployment the retry lands on a different executor set.
         """
+        import contextlib
         import threading
 
+        base = {} if memo is None else memo
+        lock = threading.Lock()
         result: dict = {}
         done = threading.Event()
 
         def run():
+            local = _OverlayMemo(base)
             try:
-                result["blocks"] = self.evaluate(node)
-            except Exception as e:  # pragma: no cover — surfaced to caller
-                result["error"] = e
-            done.set()
+                with bind() if bind is not None else contextlib.nullcontext():
+                    blocks = self._eval(node, local, self.plan(node))
+            except Exception as e:  # surfaced to caller (first resolution wins)
+                with lock:
+                    if not done.is_set():
+                        result["error"] = e
+                        done.set()
+                return
+            with lock:
+                if not done.is_set():
+                    result["blocks"] = blocks
+                    for k, v in local.items():  # commit the winner's work
+                        base[k] = v
+                    done.set()
 
         t = threading.Thread(target=run, daemon=True)
         t.start()
         if not done.wait(timeout_s):
             # straggler: launch the speculative duplicate and take the winner
-            self.stats["speculative_retries"] = self.stats.get("speculative_retries", 0) + 1
+            self.stats["speculative_retries"] += 1
             t2 = threading.Thread(target=run, daemon=True)
             t2.start()
             done.wait()
         if "error" in result:
             raise result["error"]
         return result["blocks"]
+
+
+class _OverlayMemo(dict):
+    """Read-through/write-local view of an evaluation memo: speculative
+    attempts see everything already materialised in the shared memo but
+    keep their own writes private until the winner commits them."""
+
+    __slots__ = ("_base",)
+
+    def __init__(self, base: dict):
+        super().__init__()
+        self._base = base
+
+    def __contains__(self, key):
+        return dict.__contains__(self, key) or key in self._base
+
+    def __getitem__(self, key):
+        try:
+            return dict.__getitem__(self, key)
+        except KeyError:
+            return self._base[key]
+
+    def get(self, key, default=None):
+        if dict.__contains__(self, key):
+            return dict.__getitem__(self, key)
+        return self._base.get(key, default)

@@ -345,16 +345,65 @@ class IDataFrame:
 
     def persist(self) -> "IDataFrame":
         self.node.cached = True
+        self.worker._register_cached(self.node)
         return self
 
     cache = persist
 
     def unpersist(self) -> "IDataFrame":
+        """Drop the node's materialised blocks and stop caching: the next
+        action recomputes from lineage. Scope note (docs/fault_tolerance.md):
+        this evicts the NODE-level cache; an explicit long-lived ``IJob``
+        additionally memoises evaluated subgraphs for reuse *within* that
+        job — ``job.release()`` is the eviction point for that layer."""
         self.node.cached = False
         self.node.result = None
         return self
 
     uncache = unpersist
+
+    def checkpoint(self, ckpt_dir: str) -> "IDataFrame":
+        """Materialise this frame, persist its blocks through the checkpoint
+        subsystem (src/repro/checkpoint: manifest + content hashes), and
+        TRUNCATE the lineage here: the node's parents are unlinked and its
+        repair path restores lost blocks from the checkpoint — block-wise,
+        integrity-verified — instead of recomputing ancestors
+        (docs/fault_tolerance.md). Spark's ``checkpoint()`` semantic with
+        per-block restore granularity; the step is keyed by the node id and
+        kept forever (``keep=0``), so give each frame its own directory."""
+        from repro import checkpoint as ck
+
+        node = self.node
+        blocks = self._blocks()
+        step = node.id
+        ck.save(ckpt_dir, step,
+                {f"b{i:05d}": {"data": b.data, "valid": b.valid}
+                 for i, b in enumerate(blocks)},
+                keep=0)
+        metas = [
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         {"data": b.data, "valid": b.valid})
+            for b in blocks
+        ]
+        put = self.worker._put
+
+        def _load(i: int) -> Block:
+            key = f"b{i:05d}"
+            t = ck.restore(ckpt_dir, step, {key: metas[i]})[key]
+            return Block(jax.tree.map(put, t["data"]), put(t["valid"]))
+
+        node.op = f"checkpoint({node.op})"
+        node.parents = []
+        node.narrow = False
+        node.fn = lambda _parents, _n=len(blocks): [_load(i) for i in range(_n)]
+        node.block_fn = node.fuse_fn = node.fuse_key = None
+        node.restore_fn = _load
+        node.cached = True
+        node.result = blocks
+        node.sig = ("ckpt", ckpt_dir, step)
+        node.shuffle_sig = None
+        self.worker._register_cached(node)
+        return self
 
     def explain(self) -> str:
         """Physical plan for this frame's lineage: which narrow ops the

@@ -30,6 +30,9 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
+from repro.core import faults
+from repro.core.dag import _OverlayMemo
+
 _task_ids = itertools.count()
 
 PENDING = "pending"
@@ -45,11 +48,12 @@ class JobTask:
         "id", "name", "kind", "worker", "fn", "deps", "dependents",
         "remaining", "state", "result", "error", "event", "callbacks",
         "cb_lock", "scheduler", "t_submit", "t_start", "t_end",
-        "group", "node", "lock",
+        "group", "node", "lock", "attempt", "attempts",
     )
 
     def __init__(self, name: str, kind: str, worker, fn: Callable[[], Any],
-                 deps: list["JobTask"], group=None, node=None):
+                 deps: list["JobTask"], group=None, node=None,
+                 attempts: int | None = None):
         self.id = next(_task_ids)
         self.name = name
         self.kind = kind  # "action" | "native" | "reshard" | "stage"
@@ -75,6 +79,18 @@ class JobTask:
         # tasks on disjoint sub-meshes of one worker run concurrently.
         self.group = group
         self.node = node
+        # fault tolerance (docs/fault_tolerance.md): total execution attempts
+        # for this task. A task failing with a faults.Recoverable error is
+        # re-run by the scheduler — through the job's shared memo, so only
+        # the failed subgraph recomputes (lineage repair at task granularity)
+        # — until it succeeds or exhausts the budget; non-recoverable errors
+        # cascade immediately. ``None`` → read ``ignis.task.attempts`` from
+        # the owning worker's properties (1 for worker-less tasks).
+        if attempts is None:
+            props = getattr(getattr(worker, "cluster", None), "props", None)
+            attempts = props.get_int("ignis.task.attempts", 1) if props else 1
+        self.attempt = 0
+        self.attempts = max(1, int(attempts))
         if worker is None:
             self.lock = None
         elif group is not None and hasattr(worker, "group_lock"):
@@ -162,8 +178,12 @@ class JobScheduler:
     alongside gang tasks of the same worker — correct (engine caches are
     locked, placement is re-established per stage) but oversubscribed, so
     keep a worker's concurrent jobs all-grouped for strict slice
-    isolation. Failure cascades: a dependent of a failed task fails with
-    the same error without running.
+    isolation. Failure is recovered before it cascades: a task failing
+    with a ``faults.Recoverable`` error is re-run through the job's shared
+    memo (lineage repair at task granularity) up to its
+    ``ignis.task.attempts`` budget; only a non-recoverable error, or an
+    exhausted budget, cascades — dependents then fail with the same error
+    without running (docs/fault_tolerance.md).
     """
 
     def __init__(self, max_threads: int = 16):
@@ -186,6 +206,7 @@ class JobScheduler:
             "max_concurrent": 0,
             "gang_tasks": 0,       # tasks run on a group communicator
             "group_reshards": 0,   # inter-group reshard edges executed
+            "task_retries": 0,     # recoverable-failure re-runs (faults.py)
         }
 
     # ------------------------------------------------------------------
@@ -316,18 +337,35 @@ class JobScheduler:
         try:
             self._local.held_locks = held + (task.lock,)
             try:
-                # the runner (not the task fn) binds the communicator: a
-                # cooperative helper thread may carry another task's group
-                # binding, so every task re-binds its own (None → base mesh)
                 worker = task.worker
-                if worker is not None and hasattr(worker, "use_group"):
-                    if task.group is not None:
+                if task.group is not None and worker is not None:
+                    with self._lock:
+                        self.stats["gang_tasks"] += 1
+                # Retry loop (paper §3.5: "resubmits failed tasks using the
+                # lineage DAG"): a recoverable failure re-runs the task fn.
+                # Deps already materialised sit in the job's shared memo, so
+                # the retry recomputes only this task's own subgraph; cached
+                # nodes that lost blocks repair block-wise inside the engine.
+                while True:
+                    try:
+                        faults.check("job.task", name=task.name, kind=task.kind,
+                                     attempt=task.attempt)
+                        # the runner (not the task fn) binds the communicator:
+                        # a cooperative helper thread may carry another task's
+                        # group binding, so every task re-binds its own
+                        # (None → base mesh)
+                        if worker is not None and hasattr(worker, "use_group"):
+                            with worker.use_group(task.group):
+                                task.result = task.fn()
+                        else:
+                            task.result = task.fn()
+                        break
+                    except BaseException as e:
+                        task.attempt += 1
+                        if task.attempt >= task.attempts or not faults.recoverable(e):
+                            raise
                         with self._lock:
-                            self.stats["gang_tasks"] += 1
-                    with worker.use_group(task.group):
-                        task.result = task.fn()
-                else:
-                    task.result = task.fn()
+                            self.stats["task_retries"] += 1
             finally:
                 self._local.held_locks = held
         except BaseException as e:  # surfaced via IFuture.result()
@@ -386,37 +424,23 @@ class JobScheduler:
             self._launch(task)
 
 
-class _TaskMemo(dict):
+class _TaskMemo(_OverlayMemo):
     """Task-local view of a job's shared evaluation memo: resharded copies
     of cross-group dep results live in this dict (reads prefer them, so the
-    consumer's engine sees blocks on ITS communicator), while every new
-    materialisation writes through to the shared memo for downstream
-    reuse. The shared memo itself is never re-placed — see
-    ``IJob._task_memo``."""
+    consumer's engine sees blocks on ITS communicator), while — unlike the
+    read-only-base ``_OverlayMemo`` it extends — every new materialisation
+    writes through to the shared memo for downstream reuse. The shared memo
+    itself is never re-placed — see ``IJob._task_memo``."""
 
-    __slots__ = ("_shared",)
+    __slots__ = ()
 
     def __init__(self, shared: dict, overlay: dict):
-        super().__init__(overlay)
-        self._shared = shared
-
-    def __contains__(self, key):
-        return dict.__contains__(self, key) or key in self._shared
-
-    def __getitem__(self, key):
-        try:
-            return dict.__getitem__(self, key)
-        except KeyError:
-            return self._shared[key]
-
-    def get(self, key, default=None):
-        if dict.__contains__(self, key):
-            return dict.__getitem__(self, key)
-        return self._shared.get(key, default)
+        super().__init__(shared)
+        dict.update(self, overlay)  # seed locally, never write through
 
     def __setitem__(self, key, value):
         dict.__setitem__(self, key, value)
-        self._shared[key] = value
+        self._base[key] = value
 
 
 _default: Optional[JobScheduler] = None
@@ -553,6 +577,7 @@ class IJob:
             blocks = self.memo.get(d.node)
             if not blocks:
                 continue
+            faults.check("reshard", kind="group", op=d.node.op)
             overlay[d.node] = [place_block(b, tgt.mesh, tgt.axis) for b in blocks]
             moved += len(blocks)
         if not overlay:
@@ -560,6 +585,23 @@ class IJob:
         with self.scheduler._lock:
             self.scheduler.stats["group_reshards"] += moved
         return _TaskMemo(self.memo, overlay)
+
+    @staticmethod
+    def _evaluator(worker, task):
+        """How a task materialises a node on its worker's engine: plain
+        evaluation, or — for gang tasks when ``ignis.task.speculative`` is
+        set — deadline-triggered speculative duplication, the straggler
+        half of the paper's §3.5 recovery path (docs/fault_tolerance.md)."""
+        props = getattr(getattr(worker, "cluster", None), "props", None)
+        if (task.group is not None and props is not None
+                and props.get_bool("ignis.task.speculative", False)):
+            timeout = props.get_float("ignis.task.speculative.timeout", 30.0)
+            # every speculative attempt runs on its own thread, so each must
+            # re-bind the gang communicator (thread-locals don't cross spawns)
+            return lambda node, memo: worker.engine.evaluate_speculative(
+                node, timeout_s=timeout, memo=memo,
+                bind=lambda: worker.use_group(task.group))
+        return lambda node, memo: worker.engine.evaluate(node, memo=memo)
 
     def _node_task(self, node, group=None) -> JobTask:
         """The (deduplicated) job task materialising ``node`` on its owner.
@@ -575,7 +617,7 @@ class IJob:
                     deps, group=group, node=node)
 
         def fn(_node=node, _worker=worker, _t=t):
-            return _worker.engine.evaluate(_node, memo=self._task_memo(_t))
+            return self._evaluator(_worker, _t)(_node, self._task_memo(_t))
 
         t.fn = fn
         self._node_tasks[node] = t
@@ -627,7 +669,7 @@ class IJob:
             memo = self._task_memo(_t)
             if task_fn is not None:
                 return task_fn(memo)
-            blocks = worker.engine.evaluate(node, memo=memo)
+            blocks = self._evaluator(worker, _t)(node, memo)
             return blocks_fn(blocks)
 
         t.fn = fn

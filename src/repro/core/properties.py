@@ -22,7 +22,12 @@ DEFAULTS = {
     "ignis.shuffle.memory.headroom": "1.25",  # capacity-memory fit margin
     "ignis.join.max.matches": "8",
     "ignis.transport.compression": "0",
-    "ignis.fault.max.retries": "2",
+    # fault tolerance (docs/fault_tolerance.md): total scheduler attempts
+    # per job task (1 = never retry), and the gang-task straggler policy
+    # (speculative duplicate after the timeout, DagEngine.evaluate_speculative)
+    "ignis.task.attempts": "2",
+    "ignis.task.speculative": "false",
+    "ignis.task.speculative.timeout": "30",
     "ignis.fusion.enabled": "true",  # stage compilation (DESIGN.md §5)
     "ignis.fusion.plan.cache.size": "128",  # compiled-plan LRU entries
 }

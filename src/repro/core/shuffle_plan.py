@@ -39,6 +39,7 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.core import faults
 from repro.core import shuffle as sh
 from repro.core.partition import Block, block_aval as _block_aval, block_devices, place_block
 
@@ -273,6 +274,7 @@ class ShuffleManager:
             n_ovf, n_fill = (int(x) for x in jax.device_get((ovf, fill)))
             if n_ovf > 0:
                 self._bump("overflow_retries")
+                faults.check("shuffle.overflow", kind="capacity", fill=n_fill)
                 factor = self._fit(n_fill, n_local)
                 out, _, _ = run(sh.capacity_for(factor, n_local, self.p))
         self._remember(sig, rows, factor)
@@ -308,6 +310,7 @@ class ShuffleManager:
 
         fn = self._plan(key, builder)
         self._account(b, C)
+        faults.check("shuffle.stage", kind=kind[0], p=self.p)
         return fn(b.data, b.valid)
 
     def sort(self, sig, b: Block, key_fn, ascending: bool = True) -> Block:
@@ -351,6 +354,7 @@ class ShuffleManager:
 
         fn = self._plan(key, builder)
         self._account(b, C)
+        faults.check("shuffle.stage", kind="partitionBy", p=self.p)
         return fn(b.data, b.valid)
 
     # ------------------------------------------------------------------
@@ -383,6 +387,7 @@ class ShuffleManager:
             if p > 1:
                 self._account(lb, Cl)
                 self._account(rb, Cr)
+            faults.check("shuffle.stage", kind="join", p=p, attempt=attempts - 1)
             rows, ok, eovf, lfill, rfill, fovf = fn(lb.data, lb.valid, rb.data, rb.valid)
             # one deferred check covers both exchanges AND the fan-out bound
             self._bump("overflow_checks")

@@ -1,0 +1,255 @@
+"""p=8 chaos matrix (docs/fault_tolerance.md) — run in a subprocess with 8
+host devices (tests/test_faults.py drives this; the XLA flag must precede
+jax import and must NOT leak into the main pytest process).
+
+Mirrors the p=1 matrix in tests/test_faults.py over a real 8-executor mesh:
+every task kind (narrow / fused / wide / native / reshard / action) killed
+at representative kill-points, plus the overflow-retry path, the
+checkpoint-truncated repair, speculative gang stragglers, inter-group
+reshard kills and executor kill/blacklist. Every scenario must converge to
+its no-fault oracle with EXACT retry counters.
+"""
+import os
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import ICluster, IProperties, IWorker  # noqa: E402
+from repro.core import faults  # noqa: E402
+from repro.core.dag import DagEngine  # noqa: E402
+from repro.core.faults import FaultPlan  # noqa: E402
+from repro.core.job import IJob, default_scheduler  # noqa: E402
+from repro.core.native import ignis_export  # noqa: E402
+
+
+def check(name, ok):
+    print(f"{name}: {'OK' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit(1)
+
+
+def retries():
+    return default_scheduler().stats["task_retries"]
+
+
+def recovers(name, build, collect, plan, expect_retries=1):
+    """No-fault oracle, then a fresh lineage under ``plan``: result must
+    match with exactly the expected scheduler retries, all faults fired."""
+    oracle = collect(build())
+    r0 = retries()
+    with faults.inject(plan):
+        got = collect(build())
+    check(name, got == oracle
+          and retries() - r0 == expect_retries
+          and plan.injections() == expect_retries)
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    props = IProperties({"ignis.executor.instances": "8"})
+    w = IWorker(ICluster(props), "python")
+    assert w.executors == 8
+
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 100_000, 2048).astype(np.int32)
+
+    # ---- narrow (unfused single op), kill-points at both edges ----------
+    for blk in (0, 3):
+        recovers(
+            f"p8_narrow_block{blk}",
+            lambda: w.parallelize(vals, blocks=4).map(lambda x: x * 2),
+            lambda df: sorted(int(x) for x in df.collect()),
+            FaultPlan().kill_block(op="map", block=blk))
+
+    # ---- fused stage ----------------------------------------------------
+    def fused():
+        df = (w.parallelize(vals, blocks=4)
+              .map(lambda x: x * 2)
+              .filter(lambda x: x % 3 == 0)
+              .map(lambda x: x + 1))
+        assert w.engine.plan(df.node), "chain must fuse"
+        return df
+
+    for blk in (1, 2):
+        recovers(f"p8_fused_block{blk}", fused,
+                 lambda df: sorted(int(x) for x in df.collect()),
+                 FaultPlan().kill_block(op="map", block=blk))
+
+    # ---- wide: every shuffle kind, collective killed once ---------------
+    wide_cases = [
+        ("sort", lambda: w.parallelize(vals).sort()),
+        ("distinct", lambda: w.parallelize(vals).map(lambda x: x % 17).distinct()),
+        ("reduceByKey", lambda: w.parallelize(vals)
+            .map(lambda x: {"key": x % 13, "value": jnp.int32(1)})
+            .reduce_by_key(lambda a, b: a + b, 0)),
+        ("groupByKey", lambda: w.parallelize(vals[:256])
+            .map(lambda x: {"key": x % 7, "value": x}).group_by_key()),
+        ("partitionBy", lambda: w.parallelize(vals[:512])
+            .map(lambda x: {"key": x % 5, "value": x}).partition_by()),
+    ]
+    for kind, build in wide_cases:
+        recovers(f"p8_wide_{kind}", build,
+                 lambda df: sorted(map(repr, df.collect())),
+                 FaultPlan().fail_collective(kind))
+
+    def join_build():
+        l = w.parallelize(np.arange(256, dtype=np.int32)).map(
+            lambda x: {"key": x % 8, "value": x})
+        r = w.parallelize(np.arange(64, dtype=np.int32)).map(
+            lambda x: {"key": x % 8, "value": x * 2})
+        return l.join(r)
+
+    recovers("p8_wide_join", join_build,
+             lambda df: sorted(
+                 (int(np.asarray(x["key"])), int(np.asarray(x["value"][0])),
+                  int(np.asarray(x["value"][1]))) for x in df.collect()),
+             FaultPlan().fail_collective("join"))
+
+    # ---- overflow path: fault during the capacity retry ------------------
+    wt = IWorker(
+        ICluster(IProperties({"ignis.executor.instances": "8",
+                              "ignis.shuffle.capacity.factor": "0.05"})),
+        "python")
+    vals_t = rng.integers(0, 1000, 1024).astype(np.int32)
+    oracle_t = sorted(int(v) for v in vals_t)
+    plan_ovf = FaultPlan().fail("shuffle.overflow", kind="capacity")
+    r0 = retries()
+    with faults.inject(plan_ovf):
+        got_t = [int(x) for x in wt.parallelize(vals_t).sort().collect()]
+    check("p8_overflow_retry_fault",
+          got_t == oracle_t and retries() - r0 == 1
+          and plan_ovf.injections() == 1
+          and wt.shuffle_stats()["overflow_retries"] >= 2)
+
+    # ---- native ----------------------------------------------------------
+    runs = []
+
+    @ignis_export("p8_scale")
+    def p8_scale(ctx, data=None, valid=None):
+        runs.append(1)
+        return data * jnp.int32(3), valid
+
+    recovers("p8_native",
+             lambda: w.call("p8_scale", w.parallelize(np.arange(64, dtype=np.int32))),
+             lambda df: sorted(int(x) for x in df.collect()),
+             FaultPlan().fail_node(op="call:p8_scale"))
+    check("p8_native_reran_once", len(runs) == 2)
+
+    # ---- reshard (importData between two workers on the mesh) ------------
+    w2 = IWorker(w.cluster, "python", name="dst8")
+    recovers("p8_reshard",
+             lambda: w2.import_data(
+                 w.parallelize(np.arange(128, dtype=np.int32)).map(lambda x: x + 1)),
+             lambda df: sorted(int(x) for x in df.collect()),
+             FaultPlan().fail_reshard(kind="importData"))
+
+    # ---- action -----------------------------------------------------------
+    recovers("p8_action",
+             lambda: w.parallelize(vals, blocks=4).map(lambda x: x + 3),
+             lambda df: df.count(),
+             FaultPlan().fail_task(name="count(*"))
+
+    # ---- checkpoint-truncated repair at p=8 -------------------------------
+    with tempfile.TemporaryDirectory() as td:
+        src = w.parallelize(vals, blocks=4)
+        ck = src.map(lambda x: x + 1).checkpoint(td)
+        tail = ck.map(lambda x: x * 2)
+        oracle_ck = sorted(int(x) for x in tail.collect())
+        src_cc = src.node.compute_count
+        base = dict(w.engine.stats)
+        DagEngine.kill_block(ck.node, 2)
+        got_ck = sorted(int(x) for x in tail.collect())
+        check("p8_checkpoint_repair",
+              got_ck == oracle_ck
+              and w.engine.stats["block_restores"] - base["block_restores"] == 1
+              and src.node.compute_count == src_cc
+              and ck.node.parents == [])
+
+    # ---- speculative straggler on a gang task -----------------------------
+    ws = IWorker(
+        ICluster(IProperties({"ignis.executor.instances": "8",
+                              "ignis.task.speculative": "true",
+                              "ignis.task.speculative.timeout": "0.5"})),
+        "python")
+    g0, g1 = ws.groups(2)
+    df_s = ws.parallelize(vals, blocks=2).map(lambda x: x + 5)
+    oracle_s = sorted(int(x) for x in df_s.collect())
+    df_s2 = ws.parallelize(vals, blocks=2).map(lambda x: x + 5)
+    plan_s = FaultPlan().delay_block(op="map", block=0, seconds=3.0)
+    with faults.inject(plan_s):
+        fut = df_s2.collect_async(job=IJob("spec8", group=g0))
+        got_s = sorted(int(x) for x in fut.result(120))
+    check("p8_speculative_gang",
+          got_s == oracle_s and ws.engine.stats["speculative_retries"] == 1)
+
+    # speculative attempt threads must re-bind the gang communicator: the
+    # app's execution-time context is the 4-rank group, not the world mesh
+    widths = []
+
+    @ignis_export("p8_width_probe")
+    def p8_width_probe(ctx_, data=None, valid=None):
+        widths.append(int(ctx_.executors))
+        return data, valid
+
+    futp = ws.call(
+        "p8_width_probe", ws.parallelize(np.arange(32, dtype=np.int32))
+    ).collect_async(job=IJob("specw", group=g0))
+    got_p = sorted(int(x) for x in futp.result(120))
+    check("p8_speculative_gang_keeps_group_mesh",
+          got_p == list(range(32)) and bool(widths) and set(widths) == {4})
+
+    # ---- inter-group reshard edge killed ----------------------------------
+    @ignis_export("p8_ident")
+    def p8_ident(ctx, data=None, valid=None):
+        return data, valid
+
+    def gang_build():
+        job = IJob("edge", scheduler=default_scheduler())
+        shared = ws.call("p8_ident", ws.parallelize(np.arange(64, dtype=np.int32)))
+        f1 = shared.count_async(job=job, group=g0)
+        f2 = shared.map(lambda x: x + 1).collect_async(job=job, group=g1)
+        return f1, f2
+
+    f1, f2 = gang_build()
+    oracle_e = (f1.result(120), sorted(int(x) for x in f2.result(120)))
+    r0 = retries()
+    plan_e = FaultPlan().fail_reshard(kind="group")
+    with faults.inject(plan_e):
+        f1, f2 = gang_build()
+        got_e = (f1.result(120), sorted(int(x) for x in f2.result(120)))
+    check("p8_group_reshard_fault",
+          got_e == oracle_e and retries() - r0 == 1 and plan_e.injections() == 1)
+
+    # ---- executor kill + blacklist over the real mesh ---------------------
+    gs_cached = w.groups(4)  # cached BEFORE the kill: must not bypass it
+    dfp = w.parallelize(vals, blocks=8).map(lambda x: x * 7).persist()
+    oracle_k = sorted(int(x) for x in dfp.collect())
+    base = w.engine.stats["block_recomputes"]
+    lost = w.kill_executor(5)
+    check("p8_executor_kill_lost_blocks", lost >= 1)
+    check("p8_executor_kill_repaired",
+          sorted(int(x) for x in dfp.collect()) == oracle_k
+          and w.engine.stats["block_recomputes"] - base >= 1)
+    try:
+        w.context.group([4, 5])
+        check("p8_blacklist_guard", False)
+    except ValueError as e:
+        check("p8_blacklist_guard", "blacklisted" in str(e))
+    try:
+        w.groups(4)
+        check("p8_blacklist_covers_cached_groups", False)
+    except ValueError as e:
+        check("p8_blacklist_covers_cached_groups", "blacklisted" in str(e))
+    w.restore_executor(5)
+    check("p8_blacklist_restore", w.context.group([4, 5]).executors == 2)
+    check("p8_blacklist_restore_groups", w.groups(4) is gs_cached)
+
+    print("ALL_FAULTS_OK")
+
+
+if __name__ == "__main__":
+    main()

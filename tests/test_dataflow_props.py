@@ -1,4 +1,7 @@
-"""Property-based tests (hypothesis): dataflow semantics vs Python oracles."""
+"""Property-based tests (hypothesis): dataflow semantics vs Python oracles,
+including random wide-op chains evaluated with and without one injected
+block kill (docs/fault_tolerance.md — recovery must be semantically
+invisible)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -7,6 +10,9 @@ pytest.importorskip("hypothesis", reason="dev-only dependency (requirements-dev.
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import ICluster, IProperties, IWorker
+from repro.core import faults
+from repro.core.dag import DagEngine
+from repro.core.faults import FaultPlan
 
 _worker = None
 
@@ -101,3 +107,160 @@ def test_flatmap_matches(xs, f):
 
     got = sorted(int(v) for v in df.flatmap(fn, f).collect())
     assert got == sorted(x + i for x in xs for i in range(f))
+
+
+# ---------------------------------------------------------------------------
+# single-op algebra vs oracles: union / distinct(key_fn) / aggregate_by_key /
+# sample_by_key
+# ---------------------------------------------------------------------------
+
+kvs = st.lists(st.tuples(st.integers(0, 7), st.integers(0, 255)),
+               min_size=1, max_size=30)
+
+
+def _kv_frame(pairs, blocks=1):
+    df = worker().parallelize(np.asarray(pairs, np.int32), blocks=blocks)
+    return df.map(lambda r: {"key": r[0], "value": r[1]})
+
+
+def _kv_rows(df):
+    return sorted((int(np.asarray(r["key"])), int(np.asarray(r["value"])))
+                  for r in df.collect())
+
+
+@given(ints, ints)
+@_settings
+def test_union_matches(xs, ys):
+    w = worker()
+    u = w.parallelize(np.asarray(xs, np.int32)).union(
+        w.parallelize(np.asarray(ys, np.int32)))
+    assert sorted(int(v) for v in u.collect()) == sorted(xs + ys)
+
+
+@given(kvs)
+@_settings
+def test_distinct_keyfn_matches(pairs):
+    # injective key_fn over (key, value) → oracle is the set of pairs
+    df = _kv_frame(pairs).distinct(
+        key_fn=lambda r: (r["key"] << 18) | r["value"])
+    assert _kv_rows(df) == sorted(set(pairs))
+
+
+@given(kvs)
+@_settings
+def test_aggregate_by_key_matches(pairs):
+    df = _kv_frame(pairs).aggregate_by_key(
+        0, lambda z, v: z + v, lambda a, b: a + b)
+    oracle = sorted((k, sum(v for kk, v in pairs if kk == k))
+                    for k in {k for k, _ in pairs})
+    assert _kv_rows(df) == oracle
+
+
+@given(kvs, st.dictionaries(st.integers(0, 7), st.sampled_from([0.0, 1.0]),
+                            min_size=1, max_size=8))
+@_settings
+def test_sample_by_key_zero_one_fractions(pairs, fractions):
+    # {0,1}-valued fractions make stratified sampling deterministic
+    df = _kv_frame(pairs).sample_by_key(fractions)
+    oracle = sorted((k, v) for k, v in pairs if fractions.get(k, 0.0) >= 1.0)
+    assert _kv_rows(df) == oracle
+
+
+# ---------------------------------------------------------------------------
+# random op chains vs a pure-Python oracle, with and without one injected
+# block kill (the chaos property: recovery is semantically invisible)
+# ---------------------------------------------------------------------------
+
+# each op: (name, frame_transform, oracle_transform over [(k, v)])
+_CHAIN_OPS = {
+    "map_values": (
+        lambda df: df.map_values(lambda v: v + 3),
+        lambda rows: [(k, v + 3) for k, v in rows]),
+    "filter": (
+        lambda df: df.filter(lambda r: r["value"] % 2 == 0),
+        lambda rows: [(k, v) for k, v in rows if v % 2 == 0]),
+    "distinct": (
+        lambda df: df.distinct(key_fn=lambda r: (r["key"] << 18) | r["value"]),
+        lambda rows: sorted(set(rows))),
+    "aggregate_by_key": (
+        lambda df: df.aggregate_by_key(0, lambda z, v: z + v, lambda a, b: a + b),
+        lambda rows: sorted(
+            (k, sum(v for kk, v in rows if kk == k))
+            for k in {k for k, _ in rows})),
+    "sample_by_key": (
+        lambda df: df.sample_by_key({k: 1.0 for k in range(0, 8, 2)}),
+        lambda rows: [(k, v) for k, v in rows if k % 2 == 0]),
+}
+_CHAIN_NAMES = sorted(_CHAIN_OPS)
+
+chain_st = st.lists(st.sampled_from(_CHAIN_NAMES), min_size=1, max_size=4)
+
+
+def _run_chain(pairs, chain, blocks):
+    df, rows = _kv_frame(pairs, blocks=blocks), list(pairs)
+    for name in chain:
+        op, oracle = _CHAIN_OPS[name]
+        df, rows = op(df), oracle(rows)
+    return df, sorted(rows)
+
+
+@given(kvs, chain_st, st.integers(1, 3))
+@_settings
+def test_random_chain_matches_oracle(pairs, chain, blocks):
+    df, oracle = _run_chain(pairs, chain, blocks)
+    assert _kv_rows(df) == oracle
+
+
+@given(kvs, chain_st, st.integers(1, 3), st.integers(0, 10**6))
+@_settings
+def test_random_chain_with_injected_block_kill(pairs, chain, blocks, seed):
+    """One evaluation-time block kill at a seeded kill-point: the scheduler
+    retry must converge to the oracle, and the number of retries must equal
+    the number of faults that actually fired (0 if the sampled kill-point
+    is not on this chain's path)."""
+    df, oracle = _run_chain(pairs, chain, blocks)
+    plan = FaultPlan(seed=seed)
+    op = plan.choice(["map", "mapValues", "filter"])
+    plan.kill_block(op=op, block=plan.randint(0, blocks - 1))
+    from repro.core.job import default_scheduler
+
+    r0 = default_scheduler().stats["task_retries"]
+    with faults.inject(plan):
+        got = _kv_rows(df)
+    assert got == oracle
+    assert default_scheduler().stats["task_retries"] - r0 == plan.injections()
+    assert plan.injections() <= 1
+
+
+@given(kvs, chain_st, st.integers(1, 3), st.integers(0, 10**6))
+@_settings
+def test_random_chain_with_cached_block_kill(pairs, chain, blocks, seed):
+    """Post-materialisation loss of one cached block: lineage repair must
+    reproduce the oracle exactly."""
+    df, oracle = _run_chain(pairs, chain, blocks)
+    df.persist()
+    assert _kv_rows(df) == oracle
+    if df.node.result:
+        plan = FaultPlan(seed=seed)
+        DagEngine.kill_block(df.node, plan.randint(0, len(df.node.result) - 1))
+    assert _kv_rows(df) == oracle
+
+
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 63)),
+                min_size=1, max_size=20),
+       st.lists(st.tuples(st.integers(0, 7), st.integers(0, 63)),
+                min_size=1, max_size=20),
+       st.integers(0, 10**6))
+@_settings
+def test_join_terminal_with_injected_kill(ls, rs, seed):
+    """join(max_matches) as the chain terminal, with one injected collective
+    kill: retry must converge to the oracle join."""
+    l, r = _kv_frame(ls), _kv_frame(rs)
+    j = l.join(r, max_matches=max(len(rs), 1))
+    plan = FaultPlan(seed=seed).fail_collective("join")
+    with faults.inject(plan):
+        rows = j.collect()
+    got = sorted((int(np.asarray(x["key"])), int(np.asarray(x["value"][0])),
+                  int(np.asarray(x["value"][1]))) for x in rows)
+    exp = sorted((ka, va, vb) for ka, va in ls for kb, vb in rs if ka == kb)
+    assert got == exp and plan.injections() == 1

@@ -1,0 +1,514 @@
+"""Chaos suite (docs/fault_tolerance.md): deterministic fault injection at
+every kill-point × task kind, asserting convergence to the no-fault oracle
+with EXACT retry/repair counters.
+
+Covers, at p=1 (p=8 runs the same matrix in tests/_faults_main.py):
+
+  * the FaultPlan rule machinery itself (matching, attempts, times, log)
+  * scheduler retry via lineage for all six task kinds — narrow, fused,
+    wide (every shuffle kind), native, reshard, action
+  * retry-budget exhaustion and non-recoverable cascade
+  * checkpoint-truncated repair (never re-reads the source)
+  * speculative re-execution of straggling gang tasks
+  * executor kill / blacklist / restore
+  * unpersist() eviction regressions
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ICluster, IProperties, IWorker
+from repro.core import faults
+from repro.core.dag import DagEngine
+from repro.core.faults import FaultInjected, FaultPlan
+from repro.core.job import IJob, default_scheduler
+from repro.core.native import ignis_export
+
+
+@pytest.fixture
+def worker():
+    return IWorker(ICluster(IProperties()), "python")
+
+
+def _retries():
+    return default_scheduler().stats["task_retries"]
+
+
+def _ints(n=32):
+    return np.arange(n, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan rule machinery
+# ---------------------------------------------------------------------------
+
+
+def test_rule_fires_on_exact_attempt():
+    plan = FaultPlan().kill_block(op="map", block=1, attempt=1)
+    plan.check("dag.block", op="map", block=1)  # attempt 0: no fire
+    with pytest.raises(FaultInjected):
+        plan.check("dag.block", op="map", block=1)  # attempt 1: fire
+    plan.check("dag.block", op="map", block=1)  # attempt 2: no fire
+    assert plan.injections() == 1 and plan.injections("dag.block") == 1
+
+
+def test_rule_match_is_exact_not_substring():
+    plan = FaultPlan().kill_block(op="map", block=0)
+    plan.check("dag.block", op="mapValues", block=0)  # must not match
+    with pytest.raises(FaultInjected):
+        plan.check("dag.block", op="map", block=0)
+
+
+def test_rule_glob_and_times():
+    plan = FaultPlan().fail("job.task", name="collect(*", attempt=None, times=2)
+    for _ in range(2):
+        with pytest.raises(FaultInjected):
+            plan.check("job.task", name="collect(map#3)", kind="action", attempt=0)
+    plan.check("job.task", name="collect(map#3)", kind="action", attempt=0)
+    assert plan.injections() == 2
+
+
+def test_delay_rule_sleeps_and_logs():
+    import time
+
+    plan = FaultPlan().delay("dag.node", 0.05, op="sortBy")
+    t0 = time.perf_counter()
+    plan.check("dag.node", op="sortBy")
+    assert time.perf_counter() - t0 >= 0.05
+    assert plan.log[0][0:2] == ("dag.node", "delay")
+
+
+def test_inject_nesting_restores_previous_plan():
+    a, b = FaultPlan(), FaultPlan()
+    assert faults.active() is None
+    with faults.inject(a):
+        with faults.inject(b):
+            assert faults.active() is b
+        assert faults.active() is a
+    assert faults.active() is None
+
+
+def test_seeded_sampling_is_deterministic():
+    picks = [FaultPlan(seed=7).choice(range(100)) for _ in range(3)]
+    assert len(set(picks)) == 1
+
+
+# ---------------------------------------------------------------------------
+# chaos matrix, p=1: every task kind recovers to the no-fault oracle with
+# exactly the expected retry count
+# ---------------------------------------------------------------------------
+
+
+def _assert_recovers(build, collect, plan, expect_retries=1):
+    """Oracle run without faults, then a fresh lineage under ``plan``:
+    result must match, scheduler retries must be EXACTLY ``expect_retries``
+    and every planned fault must actually have fired."""
+    oracle = collect(build())
+    r0 = _retries()
+    with faults.inject(plan):
+        got = collect(build())
+    assert got == oracle
+    assert _retries() - r0 == expect_retries
+    assert plan.injections() == expect_retries
+    return oracle
+
+
+@pytest.mark.parametrize("block", [0, 1, 2, 3])
+def test_narrow_task_block_kill(worker, block):
+    # a single map cannot fuse → the unfused block_fn path
+    def build():
+        return worker.parallelize(_ints(40), blocks=4).map(lambda x: x * 2)
+
+    _assert_recovers(build, lambda df: sorted(int(x) for x in df.collect()),
+                     FaultPlan().kill_block(op="map", block=block))
+
+
+@pytest.mark.parametrize("block", [0, 1, 2, 3])
+def test_fused_stage_block_kill(worker, block):
+    def build():
+        return (worker.parallelize(_ints(40), blocks=4)
+                .map(lambda x: x * 2)
+                .filter(lambda x: x % 3 == 0)
+                .map(lambda x: x + 1))
+
+    def collect(df):
+        assert worker.engine.plan(df.node), "chain must fuse"
+        return sorted(int(x) for x in df.collect())
+
+    _assert_recovers(build, collect, FaultPlan().kill_block(op="map", block=block))
+
+
+@pytest.mark.parametrize("kind,pipeline", [
+    ("sort", lambda df: df.sort()),
+    ("distinct", lambda df: df.map(lambda x: x % 7).distinct()),
+    ("reduceByKey", lambda df: df.map(lambda x: {"key": x % 5, "value": x})
+        .reduce_by_key(lambda a, b: a + b, 0)),
+    ("groupByKey", lambda df: df.map(lambda x: {"key": x % 5, "value": x})
+        .group_by_key()),
+    ("partitionBy", lambda df: df.map(lambda x: {"key": x % 5, "value": x})
+        .partition_by()),
+])
+def test_wide_task_collective_kill(worker, kind, pipeline):
+    def build():
+        return pipeline(worker.parallelize(_ints(30)))
+
+    def collect(df):
+        return sorted(map(repr, df.collect()))
+
+    _assert_recovers(build, collect, FaultPlan().fail_collective(kind))
+
+
+def test_wide_join_collective_kill(worker):
+    def build():
+        l = worker.parallelize(_ints(16)).map(lambda x: {"key": x % 4, "value": x})
+        r = worker.parallelize(_ints(8)).map(lambda x: {"key": x % 4, "value": x * 2})
+        return l.join(r, max_matches=4)
+
+    def collect(df):
+        return sorted(
+            (int(np.asarray(x["key"])), int(np.asarray(x["value"][0])),
+             int(np.asarray(x["value"][1]))) for x in df.collect())
+
+    _assert_recovers(build, collect, FaultPlan().fail_collective("join"))
+
+
+def test_native_task_kill(worker):
+    runs = []
+
+    @ignis_export("faulty_scale")
+    def faulty_scale(ctx, data=None, valid=None):
+        runs.append(1)
+        return data * jnp.int32(3), valid
+
+    def build():
+        return worker.call("faulty_scale", worker.parallelize(_ints(12)))
+
+    runs.clear()
+    _assert_recovers(build, lambda df: sorted(int(x) for x in df.collect()),
+                     FaultPlan().fail_node(op="call:faulty_scale"))
+    # oracle run once + faulted attempt killed BEFORE the app + retry run
+    assert len(runs) == 2
+
+
+def test_reshard_task_kill():
+    cluster = ICluster(IProperties())
+    w1 = IWorker(cluster, "python", name="src-w")
+    w2 = IWorker(cluster, "python", name="dst-w")
+
+    def build():
+        return w2.import_data(w1.parallelize(_ints(20)).map(lambda x: x + 1))
+
+    _assert_recovers(build, lambda df: sorted(int(x) for x in df.collect()),
+                     FaultPlan().fail_reshard(kind="importData"))
+
+
+def test_action_task_kill(worker):
+    def build():
+        return worker.parallelize(_ints(24), blocks=2).map(lambda x: x + 3)
+
+    _assert_recovers(build, lambda df: df.count(),
+                     FaultPlan().fail_task(name="count(*"))
+
+
+def test_take_action_iter_path_kill(worker):
+    """Early-exit take evaluates through the lazy block iterator — its
+    injection sites retry like any other action."""
+    def build():
+        return worker.parallelize(_ints(40), blocks=4).map(lambda x: x + 1)
+
+    _assert_recovers(build, lambda df: [int(x) for x in df.take(5)],
+                     FaultPlan().kill_block(op="map", block=0))
+
+
+# ---------------------------------------------------------------------------
+# retry budget semantics
+# ---------------------------------------------------------------------------
+
+
+def test_kill_on_retry_attempt_needs_bigger_budget():
+    w = IWorker(ICluster(IProperties({"ignis.task.attempts": "3"})), "python")
+
+    def build():
+        return w.parallelize(_ints(16), blocks=2).map(lambda x: x * 5)
+
+    plan = (FaultPlan()
+            .kill_block(op="map", block=1, attempt=0)
+            .kill_block(op="map", block=1, attempt=1))
+    _assert_recovers(build, lambda df: sorted(int(x) for x in df.collect()),
+                     plan, expect_retries=2)
+
+
+def test_budget_exhaustion_surfaces_the_fault(worker):
+    df = worker.parallelize(_ints(8)).map(lambda x: x)
+    plan = FaultPlan().fail("dag.block", op="map", block=0, attempt=None)
+    r0 = _retries()
+    with faults.inject(plan):
+        with pytest.raises(FaultInjected):
+            df.collect()
+    # default budget ignis.task.attempts=2 → exactly one retry then cascade
+    assert _retries() - r0 == 1
+
+
+def test_non_recoverable_error_never_retries(worker):
+    @ignis_export("det_boom")
+    def det_boom(ctx, data=None, valid=None):
+        raise ValueError("deterministic app bug")
+
+    fut = worker.call("det_boom", worker.parallelize(_ints(4))).count_async()
+    r0 = _retries()
+    with pytest.raises(ValueError, match="deterministic"):
+        fut.result(30)
+    assert _retries() == r0
+    # the native boundary task failed; the action cascaded without running
+    assert fut.task.attempt == 0 and fut.task.state == "failed"
+
+
+def test_retries_disabled_by_property():
+    w = IWorker(ICluster(IProperties({"ignis.task.attempts": "1"})), "python")
+    df = w.parallelize(_ints(8)).map(lambda x: x)
+    r0 = _retries()
+    with faults.inject(FaultPlan().kill_block(op="map", block=0)):
+        with pytest.raises(FaultInjected):
+            df.collect()
+    assert _retries() == r0
+
+
+def test_failure_cascade_after_exhaustion(worker):
+    """Dependents of an unrecoverable task still fail with its error."""
+    job = IJob("cascade")
+    df = worker.parallelize(_ints(8)).map(lambda x: x)
+    plan = FaultPlan().fail("job.task", name="count(*", attempt=None)
+    with faults.inject(plan):
+        f1 = df.count_async(job=job)
+        with pytest.raises(FaultInjected):
+            f1.result(30)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-aware lineage recovery
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_truncates_lineage(worker, tmp_path):
+    src = worker.parallelize(_ints(40), blocks=4)
+    ck = src.map(lambda x: x + 1).map(lambda x: x * 3).checkpoint(str(tmp_path))
+    assert ck.node.parents == []
+    assert ck.node.op.startswith("checkpoint(")
+    assert sorted(int(x) for x in ck.collect()) == sorted(
+        (x + 1) * 3 for x in range(40))
+
+
+def test_checkpoint_repair_restores_block_not_source(worker, tmp_path):
+    src = worker.parallelize(_ints(40), blocks=4)
+    ck = src.map(lambda x: x + 1).checkpoint(str(tmp_path))
+    tail = ck.map(lambda x: x * 2)
+    oracle = sorted(int(x) for x in tail.collect())
+    src_cc = src.node.compute_count
+    base = dict(worker.engine.stats)
+    DagEngine.kill_block(ck.node, 2)
+    assert sorted(int(x) for x in tail.collect()) == oracle
+    assert worker.engine.stats["block_restores"] - base["block_restores"] == 1
+    assert worker.engine.stats["block_recomputes"] == base["block_recomputes"]
+    assert src.node.compute_count == src_cc  # source never re-read
+
+
+def test_checkpoint_full_loss_restores_everything(worker, tmp_path):
+    ck = worker.parallelize(_ints(24), blocks=3).map(lambda x: x * 7).checkpoint(
+        str(tmp_path))
+    oracle = sorted(int(x) for x in ck.collect())
+    ck.node.result = None  # total cache loss — reload all blocks from disk
+    assert sorted(int(x) for x in ck.collect()) == oracle
+
+
+def test_checkpoint_restore_verifies_integrity(worker, tmp_path):
+    ck = worker.parallelize(_ints(16), blocks=2).map(lambda x: x + 9).checkpoint(
+        str(tmp_path))
+    sdir = [d for d in os.listdir(tmp_path) if d.startswith("step_")][0]
+    victim = sorted(f for f in os.listdir(tmp_path / sdir) if f.endswith(".npy"))[0]
+    with open(tmp_path / sdir / victim, "r+b") as f:
+        f.seek(90)
+        f.write(b"\xde\xad")
+    DagEngine.kill_block(ck.node, 0)
+    with pytest.raises(IOError, match="corruption"):
+        ck.collect()
+
+
+def test_kill_during_post_checkpoint_map_retries_from_checkpoint(worker, tmp_path):
+    src = worker.parallelize(_ints(32), blocks=4)
+    ck = src.map(lambda x: x + 1).checkpoint(str(tmp_path))
+    src_cc = src.node.compute_count
+
+    def build():
+        return ck.map(lambda x: x - 1)
+
+    _assert_recovers(build, lambda df: sorted(int(x) for x in df.collect()),
+                     FaultPlan().kill_block(op="map", block=1))
+    assert src.node.compute_count == src_cc
+
+
+# ---------------------------------------------------------------------------
+# speculative re-execution (straggler policy for gang tasks)
+# ---------------------------------------------------------------------------
+
+
+def _spec_worker(timeout: float = 0.25):
+    return IWorker(ICluster(IProperties({
+        "ignis.task.speculative": "true",
+        "ignis.task.speculative.timeout": str(timeout),
+    })), "python")
+
+
+def test_straggling_gang_task_is_speculatively_duplicated():
+    w = _spec_worker()
+    g = w.groups(1)[0]
+    oracle = sorted(
+        int(x) for x in
+        w.parallelize(_ints(16), blocks=2).map(lambda x: x + 5).collect())
+    df = w.parallelize(_ints(16), blocks=2).map(lambda x: x + 5)
+    plan = FaultPlan().delay_block(op="map", block=0, seconds=1.5)
+    with faults.inject(plan):
+        fut = df.collect_async(job=IJob("spec", group=g))
+        got = sorted(int(x) for x in fut.result(60))
+    assert got == oracle
+    assert w.engine.stats["speculative_retries"] == 1
+    assert plan.injections() == 1
+
+
+def test_fast_gang_task_launches_no_duplicate():
+    # generous deadline: this asserts the ABSENCE of a duplicate, so the
+    # deadline must sit far above suite-load jitter (~0.1 s evaluations)
+    w = _spec_worker(timeout=5.0)
+    g = w.groups(1)[0]
+    df = w.parallelize(_ints(16), blocks=2).map(lambda x: x + 5)
+    assert df.collect_async(job=IJob("fast", group=g)).result(60)
+    assert w.engine.stats["speculative_retries"] == 0
+
+
+def test_speculative_policy_off_for_ungrouped_tasks():
+    w = _spec_worker()
+    df = w.parallelize(_ints(16), blocks=2).map(lambda x: x + 5)
+    plan = FaultPlan().delay_block(op="map", block=0, seconds=0.6)
+    with faults.inject(plan):
+        assert df.count() == 16  # no group → no deadline, just slow
+    assert w.engine.stats["speculative_retries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# executor kill + blacklist
+# ---------------------------------------------------------------------------
+
+
+def test_kill_executor_repairs_cached_blocks(worker):
+    df = worker.parallelize(_ints(24), blocks=3).map(lambda x: x * 7).persist()
+    oracle = sorted(int(x) for x in df.collect())
+    base = worker.engine.stats["block_recomputes"]
+    assert worker.kill_executor(1, blacklist=False) >= 1
+    assert sorted(int(x) for x in df.collect()) == oracle
+    assert worker.engine.stats["block_recomputes"] - base == 1
+
+
+def test_blacklisted_rank_refused_by_group_until_restored(worker):
+    worker.kill_executor(0)
+    with pytest.raises(ValueError, match="blacklisted"):
+        worker.context.group([0])
+    worker.restore_executor(0)
+    assert worker.context.group([0]).executors == 1
+
+
+def test_blacklist_covers_cached_groups(worker):
+    """A split cached by groups(n) BEFORE a kill must not keep handing out
+    sub-clusters over the lost rank."""
+    gs = worker.groups(1)
+    worker.kill_executor(0)
+    with pytest.raises(ValueError, match="blacklisted"):
+        worker.groups(1)
+    worker.restore_executor(0)
+    assert worker.groups(1) is gs  # same communicators (and locks) return
+
+
+# ---------------------------------------------------------------------------
+# unpersist(): eviction regressions
+# ---------------------------------------------------------------------------
+
+
+def test_unpersist_drops_blocks_and_recomputes(worker):
+    df = worker.parallelize(_ints(20), blocks=2).map(lambda x: x + 1).persist()
+    assert df.count() == 20
+    assert df.node.result is not None
+    cc = df.node.compute_count
+    df.unpersist()
+    assert df.node.result is None and not df.node.cached
+    assert df.count() == 20
+    assert df.node.compute_count > cc  # really recomputed
+    assert df.node.result is None  # and not silently re-cached
+
+
+def test_unpersist_restores_fusability(worker):
+    mid = (worker.parallelize(_ints(20)).map(lambda x: x * 2)
+           .filter(lambda x: x % 2 == 0).persist())
+    tail = mid.map(lambda x: x + 1)
+    tail.count()
+    assert mid.node not in worker.engine.plan(tail.node)  # cached boundary
+    mid.unpersist()
+    plans = worker.engine.plan(tail.node)
+    assert any(mid.node in stage.nodes for stage in plans.values())
+
+
+def test_unpersist_with_holes_is_safe(worker):
+    df = worker.parallelize(_ints(30), blocks=3).map(lambda x: x - 1).persist()
+    oracle = sorted(int(x) for x in df.collect())
+    DagEngine.kill_block(df.node, 1)
+    df.unpersist()
+    assert sorted(int(x) for x in df.collect()) == oracle
+
+
+def test_unpersist_node_dropped_by_executor_kill_accounting(worker):
+    """An unpersisted node no longer holds blocks, so an executor kill
+    after unpersist must not count it as a lost block."""
+    df = worker.parallelize(_ints(16), blocks=2).map(lambda x: x).persist()
+    df.count()
+    df.unpersist()
+    killed_before = worker.kill_executor(1, blacklist=False)
+    # only the parallelize source (still cached) can lose its block
+    assert all(n.op == "parallelize" or n.result is None
+               for n in list(worker._cached_nodes))
+    assert killed_before <= 1
+
+
+def test_job_memo_reuse_is_scoped_to_the_job(worker):
+    """Within one explicit IJob the shared memo intentionally reuses an
+    unpersisted node's blocks (docs/fault_tolerance.md); release() is that
+    layer's eviction point and the NEXT job recomputes."""
+    df = worker.parallelize(_ints(12), blocks=2).map(lambda x: x + 2).persist()
+    job = IJob("memo-scope")
+    assert df.count_async(job=job).result(30) == 12
+    df.unpersist()
+    cc = df.node.compute_count
+    job.release()
+    assert df.count() == 12
+    assert df.node.compute_count > cc
+
+
+# ---------------------------------------------------------------------------
+# the p=8 chaos matrix (subprocess: the 8-device flag must not leak here)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.timeout(900)
+def test_faults_suite_p8():
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), env.get("PYTHONPATH", "")]
+    )
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(here, "_faults_main.py")],
+        env=env, capture_output=True, text=True, timeout=880,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "ALL_FAULTS_OK" in r.stdout

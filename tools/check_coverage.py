@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Coverage floor gate (the tools/check_bench.py analogue for test depth):
+parse a Cobertura ``coverage.xml`` produced by ``pytest --cov`` and fail the
+build when line coverage over the measured package drops below the
+committed floor.
+
+Policy (mirrors the perf gate's philosophy):
+
+* The floor is a COMMITTED number (the ``--min`` value in ci.yml), not a
+  moving average — a PR that deletes tests or adds uncovered hot-path code
+  must fail loudly, and raising the floor is an explicit, reviewed act.
+* The floor is deliberately below the observed value (observed ≈ 0.85+ for
+  ``repro.core`` under the core-focused test selection): coverage jitters a
+  few points with test re-ordering and platform-dependent branches
+  (compat shims, p>1-only paths), and the gate must not be flaky.
+* Per-file rates are printed for the CI log, worst-first, so a failing run
+  shows WHERE the depth went, but only the aggregate is gated — per-file
+  floors would punish small files for single-line changes.
+
+Usage:
+  python tools/check_coverage.py --min 0.75 coverage.xml
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("xml", help="Cobertura XML from pytest --cov-report=xml:...")
+    ap.add_argument("--min", type=float, default=0.75,
+                    help="committed aggregate line-rate floor (0..1)")
+    args = ap.parse_args()
+
+    root = ET.parse(args.xml).getroot()
+    rate = float(root.get("line-rate", 0.0))
+
+    per_file = []
+    for cls in root.iter("class"):
+        per_file.append((float(cls.get("line-rate", 0.0)), cls.get("filename")))
+    for r, name in sorted(per_file):
+        print(f"  {r:6.1%}  {name}")
+    covered = root.get("lines-covered", "?")
+    valid = root.get("lines-valid", "?")
+    print(f"aggregate line coverage: {rate:.1%} ({covered}/{valid} lines)")
+
+    if rate < args.min:
+        print(f"coverage gate FAILED: {rate:.1%} < committed floor {args.min:.1%}",
+              file=sys.stderr)
+        return 1
+    print(f"coverage gate OK ({rate:.1%} >= floor {args.min:.1%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
