@@ -1,0 +1,86 @@
+"""Collective micro-benchmark: per-collective µs/call for the three call
+shapes the engine offers (docs/collectives.md):
+
+* **blocking**   — ``comm.allreduce(ctx, x)``: dispatch + wait in one call
+  (itself a facade over the nonblocking path, so this prices the whole
+  round trip including the plan-cache lookup).
+* **nonblocking** — ``comm.iallreduce(ctx, x)`` then ``handle.wait()``:
+  same work split into MPI_Start/MPI_Wait halves; the dispatch half is
+  what a scheduler overlaps with other work.
+* **persistent**  — ``comm.persistent(ctx, "allreduce", x)`` held across
+  the loop and invoked directly: init-once/invoke-many (UCC-style), no
+  per-call cache lookup or handle bookkeeping at all.
+
+The derived row carries ``recompiles=`` — plan-cache misses accumulated
+over the WARM timing loops, which must be zero (every shape reuses the
+plan compiled during warmup; a miss means the cache key is unstable) —
+and the counter is gated with zero tolerance by tools/check_bench.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import ICluster, IProperties, IWorker, comm
+
+_COLLS = ("allreduce", "bcast", "gather", "alltoall", "exscan", "ppermute")
+
+
+def bench(n: int = 1 << 12, iters: int = 30):
+    cluster = ICluster(IProperties())
+    ctx = IWorker(cluster, "python").context
+    rng = np.random.default_rng(0)
+    x = comm.shard_rows(ctx, rng.normal(size=n).astype(np.float32))
+
+    blocking = {
+        "allreduce": lambda: comm.allreduce(ctx, x),
+        "bcast": lambda: comm.bcast(ctx, x),
+        "gather": lambda: comm.gather(ctx, x),
+        "alltoall": lambda: comm.alltoall(ctx, x),
+        "exscan": lambda: comm.exscan(ctx, x),
+        "ppermute": lambda: comm.ppermute(ctx, x, shift=1),
+    }
+    nonblocking = {
+        "allreduce": lambda: comm.iallreduce(ctx, x).wait(),
+        "bcast": lambda: comm.ibcast(ctx, x).wait(),
+        "gather": lambda: comm.igather(ctx, x).wait(),
+        "alltoall": lambda: comm.ialltoall(ctx, x).wait(),
+        "exscan": lambda: comm.iexscan(ctx, x).wait(),
+        "ppermute": lambda: comm.ippermute(ctx, x, shift=1).wait(),
+    }
+
+    rows = []
+    for coll in _COLLS:
+        rows.append(row(f"coll_{coll}_blocking",
+                        timeit(blocking[coll], warmup=1, iters=iters),
+                        f"n={n}"))
+        rows.append(row(f"coll_{coll}_nonblocking",
+                        timeit(nonblocking[coll], warmup=1, iters=iters),
+                        "i*().wait()"))
+        plan = comm.persistent(ctx, coll, x,
+                               **({"shift": 1} if coll == "ppermute" else {}))
+        rows.append(row(f"coll_{coll}_persistent",
+                        timeit(lambda p=plan: p(x), warmup=1, iters=iters),
+                        "init-once/invoke-many"))
+
+    # every timed call above ran against a plan warmed during its warmup
+    # call; misses accumulated SINCE then are recompiles the cache failed
+    # to absorb. Snapshot-diff keeps the counter meaningful when other
+    # benches in the same process already populated the cache.
+    before = comm.comm_stats()["coll_plan_misses"]
+    for coll in _COLLS:
+        blocking[coll]()
+        nonblocking[coll]()
+    recompiles = comm.comm_stats()["coll_plan_misses"] - before
+    stats = comm.comm_stats()
+    rows.append(row(
+        "coll_plan_cache", 0.0,
+        f"recompiles={recompiles} hits={stats['coll_plan_hits']} "
+        f"misses={stats['coll_plan_misses']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(bench())

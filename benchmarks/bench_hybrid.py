@@ -5,12 +5,23 @@ Two independent branches — a CG solve (``worker.call`` on an "spmd" worker)
 and a reduceByKey pipeline (on a "dataflow" worker) — are measured eagerly
 (back-to-back: sum of stage wall-clocks) and then submitted asynchronously
 into one ``IJob``, where the scheduler overlaps them across the two
-workers. The dataflow stage self-balances: it repeats its action R times
-with R chosen so both branches cost roughly the same eagerly, which makes
-the ideal async speedup ~2x and keeps the comparison honest at any machine
-speed. The derived overlap factor (eager sum / async wall) must be > 1.
+workers. The balancing is two-sided: whichever branch is cheaper per
+action repeats R times so both branches cost roughly the same eagerly,
+which makes the ideal async speedup ~2x and keeps the comparison honest at
+any machine speed. (It must be two-sided: with persistent collective plans
+the CG app no longer re-traces per call — DESIGN.md §10 — so the native
+action is device-bound and cheap, and it is the DATAFLOW branch that sets
+the floor.) The native branch's warm calls run almost entirely inside XLA
+with the GIL released, which is exactly what lets the Python-heavy
+dataflow branch make progress concurrently; the derived overlap factor
+(eager sum / async wall) must meet its declared target. The target is
+cores-aware: real overlap needs a second core for the XLA executor to run
+on — on a single-core host the factor's floor is only "the nonblocking
+path adds no overhead" (see the comment at the derived row).
 """
 from __future__ import annotations
+
+import os
 
 import jax.numpy as jnp
 import numpy as np
@@ -20,65 +31,90 @@ from repro.core import ICluster, IProperties, IWorker
 from repro.core.job import IJob
 
 
-def bench(n: int = 1 << 16, cg_iters: int = 200, iters: int = 3):
+def bench(n: int = 1 << 16, cg_iters: int = 200, iters: int = 3,
+          n_cg: int = 1 << 16):
     cluster = ICluster(IProperties())
     ws = IWorker(cluster, "spmd")
     ws.load_library("repro.apps.stencil")
     wd = IWorker(cluster, "python")
     rng = np.random.default_rng(0)
-    b = rng.normal(size=4096).astype(np.float32)
+    # n_cg sets how device-heavy the native branch is: the CG solve must be
+    # dominated by in-flight XLA work (not dispatch) for the async job to
+    # have anything to overlap the dataflow branch's Python against
+    b = rng.normal(size=n_cg).astype(np.float32)
     vals = rng.integers(0, 100_000, n).astype(np.int32)
-    native = ws.call("cg_app", ws.parallelize(b), iters=cg_iters)
     base = wd.parallelize(vals)
 
-    # a FRESH lineage per evaluation in BOTH arms: a job's shared memo would
-    # otherwise evaluate one reused node once and hand the async arm R-1
-    # free cache hits the eager arm pays for
+    # a FRESH lineage per evaluation in BOTH arms and BOTH branches: a job's
+    # shared memo (or a reused node's cache) would otherwise evaluate once
+    # and hand the async arm R-1 free hits the eager arm pays for
+    def make_native():
+        return ws.call("cg_app", ws.parallelize(b), iters=cg_iters)
+
     def make_mapred():
         return base.map(lambda x: {"key": x % 97, "value": jnp.int32(1)}).reduce_by_key(
             lambda a, b: a + b, 0
         )
 
     # correctness parity: async futures return what the eager actions return
-    mapred = make_mapred()
+    # (this also warms the CG persistent plan, so the timed section below
+    # measures invoke-many steady state, not the one-off init/compile)
+    native, mapred = make_native(), make_mapred()
     job0 = IJob("hybrid-parity")
     fn, fm = native.count_async(job=job0), mapred.count_async(job=job0)
-    assert fn.result() == native.count()
+    assert fn.result() == make_native().count()
     assert fm.result() == make_mapred().count()
 
-    # single-action costs → self-balancing repeat factor for the dataflow
-    # branch (the CG app re-traces its shard_map per execution, so the
-    # native stage has a large machine-dependent floor)
-    t_native_1 = timeit(lambda: native.count(), warmup=0, iters=1)
+    # single-action costs → self-balancing repeat factors: the cheaper
+    # branch repeats so the two eager stages cost about the same
+    t_native_1 = timeit(lambda: make_native().count(), warmup=0, iters=1)
     t_mapred_1 = timeit(lambda: make_mapred().count(), warmup=0, iters=1)
-    R = max(1, min(64, round(t_native_1 / max(t_mapred_1, 1e-4))))
+    rn = max(1, min(64, round(t_mapred_1 / max(t_native_1, 1e-5))))
+    rm = max(1, min(64, round(t_native_1 / max(t_mapred_1, 1e-5))))
+
+    def native_stage():
+        for _ in range(rn):
+            make_native().count()
 
     def dataflow_stage():
-        for _ in range(R):
+        for _ in range(rm):
             make_mapred().count()
 
-    t_native = timeit(lambda: native.count(), warmup=0, iters=iters)
+    t_native = timeit(native_stage, warmup=0, iters=iters)
     t_mapred = timeit(dataflow_stage, warmup=0, iters=iters)
 
     def async_job():
         job = IJob("hybrid")
-        futs = [native.count_async(job=job)]
-        futs += [make_mapred().count_async(job=job) for _ in range(R)]
+        futs = [make_native().count_async(job=job) for _ in range(rn)]
+        futs += [make_mapred().count_async(job=job) for _ in range(rm)]
         for f in futs:
             f.result()
 
     t_async = timeit(async_job, warmup=0, iters=iters)
 
     eager_sum = t_native + t_mapred
+    # The floor scales with the machine's physics. With ≥2 cores the CG's
+    # XLA executor threads run beside the GIL-bound dataflow Python, so the
+    # async job must genuinely overlap them (≥1.15x, the CI hard gate —
+    # tools/check_bench.py reads target= off this row). On a single core
+    # there is nothing to overlap WITH — both arms are CPU-equivalent by
+    # construction (measured utilisation 1.00 either way) — so the floor
+    # degenerates to "the nonblocking path adds no overhead": the
+    # regression this row guards showed up as async ≈ 0.75-0.88x of eager
+    # (actions blocking on the device queue while holding the worker's job
+    # lock), which 0.90 still catches.
+    cores = os.cpu_count() or 1
+    floor = 1.15 if cores > 1 else 0.90
+    factor = eager_sum / t_async
     return [
-        row("hybrid_native_eager", t_native, f"cg_iters={cg_iters}"),
-        row("hybrid_mapreduce_eager", t_mapred, f"n={n} repeats={R}"),
+        row("hybrid_native_eager", t_native, f"cg_iters={cg_iters} repeats={rn}"),
+        row("hybrid_mapreduce_eager", t_mapred, f"n={n} repeats={rm}"),
         row("hybrid_async_job", t_async, "one IJob, two workers"),
         row(
             "hybrid_overlap",
             0.0,
-            f"async_vs_eager_sum={eager_sum / t_async:.2f}x "
-            f"overlap_ok={t_async < eager_sum}",
+            f"async_vs_eager_sum={factor:.2f}x "
+            f"overlap_ok={factor >= floor} cores={cores} target={floor}",
         ),
     ]
 

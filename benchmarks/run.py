@@ -8,6 +8,7 @@
   Fig 18     bench_tc          join/union/distinct fixed point
   Fig 19-22  bench_hpc_native  native SPMD apps via worker.call (overhead %)
   §3.2/Fig 2 bench_hybrid      one IJob: native + MapReduce branches overlap
+  §4 (UCC)   bench_collectives blocking vs nonblocking vs persistent plans
   §2.2/§5    bench_groups      gang-scheduled jobs on disjoint sub-meshes
   Table 5    bench_sloc        integration SLOC
   (ours)     roofline          §Roofline summary from the dry-run artifacts
@@ -34,7 +35,8 @@ SMOKE_KWARGS = {
     "pagerank": {"n_vertices": 24, "n_edges": 60, "iters": 2},
     "kmeans": {},
     "minebench": {},
-    "hybrid": {"n": 1 << 14, "cg_iters": 100, "iters": 2},
+    "hybrid": {"n": 1 << 14, "cg_iters": 400, "iters": 3, "n_cg": 1 << 16},
+    "collectives": {"n": 1 << 10, "iters": 10},
     "groups": {"size": 2048, "cg_iters": 1000, "n": 1 << 10, "iters": 3},
     "recovery": {"n": 20_000, "iters": 3},
 }
@@ -48,6 +50,7 @@ BENCHES = [
     ("tc", "benchmarks.bench_tc"),
     ("hpc_native", "benchmarks.bench_hpc_native"),
     ("hybrid", "benchmarks.bench_hybrid"),
+    ("collectives", "benchmarks.bench_collectives"),
     ("groups", "benchmarks.bench_groups"),
     ("recovery", "benchmarks.bench_recovery"),
     ("sloc", "benchmarks.bench_sloc"),

@@ -17,8 +17,24 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import compat
+from repro.core import comm, compat
 from repro.core.native import ignis_export
+
+
+def _spmd_plan(tag: str, mesh, axis: str, statics: tuple, prog, x):
+    """Persistent plan for a whole SPMD program (comm.persistent_program):
+    traced + compiled once per (program, statics, operand aval, mesh) and
+    reused from the collective plan cache. The re-trace this avoids is
+    pure-Python, GIL-bound work — hoisting it is what lets a native branch
+    overlap a concurrently running dataflow branch (DESIGN.md §10)."""
+    x = jnp.asarray(x)
+
+    def builder():
+        return compat.shard_map(prog, mesh=mesh, in_specs=(P(axis),),
+                                out_specs=P(axis))
+
+    return comm.persistent_program(
+        tag, mesh, (axis, *statics, x.shape, str(x.dtype)), builder), x
 
 
 # ---------------------------------------------------------------------------
@@ -43,7 +59,8 @@ def stencil_native(mesh, axis, grid, iters: int):
 
         return jax.lax.fori_loop(0, iters, body, u)
 
-    return compat.shard_map(prog, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis))(grid)
+    fn, grid = _spmd_plan("stencil", mesh, axis, (iters,), prog, grid)
+    return fn(grid)
 
 
 @ignis_export("stencil_app")
@@ -99,7 +116,8 @@ def cg_native(mesh, axis, b, iters: int):
         x, r, q, rs = jax.lax.fori_loop(0, iters, body, (x, r, q, rs))
         return x
 
-    return compat.shard_map(prog, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis))(b)
+    fn, b = _spmd_plan("cg", mesh, axis, (iters,), prog, b)
+    return fn(b)
 
 
 @ignis_export("cg_app")
@@ -107,7 +125,10 @@ def cg_app(ctx, data=None, valid=None):
     iters = int(ctx.var("iters", 20))
     mesh, axis = ctx.comm()
     out = cg_native(mesh, axis, data, iters)
-    return out, valid
+    # hand the in-flight result back as a nonblocking handle: the driver
+    # layer chains the Block adaptation onto it and the engine awaits it
+    # (docs/collectives.md — handle-returning native apps)
+    return comm.CollHandle("spmd.cg", ctx, (out, valid))
 
 
 def laplacian_matvec_ref(x):

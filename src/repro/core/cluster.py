@@ -17,6 +17,7 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.core import comm as comm_mod
 from repro.core import compat
 from repro.core import faults
 from repro.core.context import IContext
@@ -268,8 +269,10 @@ class IWorker:
     def shuffle_stats(self) -> dict:
         """Adaptive shuffle engine telemetry (DESIGN.md §6): exchanges,
         overflow/fan-out retries, deferred checks, capacity-memory hits,
-        wide-plan compiles/hits, bytes moved."""
-        return dict(self.shuffle.stats)
+        wide-plan compiles/hits, bytes moved — plus the collective engine's
+        persistent-plan and handle counters (DESIGN.md §10; process-wide,
+        so two workers sharing one mesh see one set of plan counters)."""
+        return {**self.shuffle.stats, **comm_mod.comm_stats()}
 
     # ------------------------------------------------------------------
     # data ingestion (driver communicator)
@@ -456,6 +459,12 @@ class IWorker:
         def fn(parent_results):
             ctx = worker.context.bind(params)  # execution-time binding
             out = app(ctx, *worker._native_args(ctx, parent_results))
+            if comm_mod.is_handle(out):
+                # app handed back an in-flight collective: keep it
+                # nonblocking — chain the Block adaptation onto the handle
+                # and let the engine/scheduler await it (dag.py _compute)
+                return out.chain(
+                    lambda v: [v] if isinstance(v, Block) else [Block(*v)])
             if isinstance(out, Block):
                 return [out]
             data, valid = out
@@ -480,6 +489,8 @@ class IWorker:
             ctx = worker.context.bind(params)  # execution-time binding
             b = parent_blocks[0]
             out = app(ctx, b.data, b.valid)
+            if comm_mod.is_handle(out):
+                out = out.wait()  # block-wise lineage is the sync point here
             if isinstance(out, Block):
                 return out
             data, valid = out

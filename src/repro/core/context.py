@@ -52,6 +52,17 @@ class IContext:
         """Executor rank — only meaningful inside shard_map'd code."""
         return jax.lax.axis_index(self.axis)
 
+    def place(self, x, spec=None):
+        """Commit ``x`` to THIS communicator's mesh (no-op when already
+        resident): row-sharded over the collective axis by default, or per
+        ``spec``. A shard_map over a group mesh rejects operands committed
+        to a different device set, so placing first is what makes
+        collectives — and their nonblocking handles — group-portable: the
+        device_put IS the inter-group reshard edge (docs/collectives.md)."""
+        if spec is None:
+            spec = jax.sharding.PartitionSpec(self.axis)
+        return jax.device_put(x, jax.NamedSharding(self.mesh, spec))
+
     # ---- communicator groups (MPI_Comm_split / MPI_Comm_create) -----------
     @property
     def is_group(self) -> bool:

@@ -26,7 +26,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.core import faults
+from repro.core import comm, faults
 
 _ids = itertools.count()
 
@@ -143,6 +143,7 @@ class DagEngine:
             "iter_block_computes": 0,
             "block_restores": 0,  # blocks repaired from a checkpoint
             "speculative_retries": 0,  # straggler duplicates launched
+            "handle_awaits": 0,  # CollHandle-valued node results awaited
         }
 
     # ---- planner (stage compilation) ----------------------------------------
@@ -386,7 +387,16 @@ class DagEngine:
             return out
         faults.check("dag.node", op=node.op)
         self.stats["wide_computes"] += 1
-        return node.fn(parent_results)
+        out = node.fn(parent_results)
+        if comm.is_handle(out):
+            # a wide/native node may return a nonblocking collective handle
+            # (e.g. an SPMD app handing back an in-flight result); the
+            # engine is the synchronisation point for lineage, so it awaits
+            # here — a FaultInjected from the pending handle surfaces like
+            # any node failure and retries through the scheduler
+            out = out.wait()
+            self.stats["handle_awaits"] += 1
+        return out
 
     def _compute_stage(self, stage: FusedStage, memo: dict, plans: dict):
         """Run a fused stage: one compiled kernel per block, head's parent to

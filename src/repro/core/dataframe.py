@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import comm
 from repro.core import executor as ex
 from repro.core import shuffle as sh
 from repro.core.dag import TaskNode, node_sig
@@ -436,11 +437,16 @@ class IDataFrame:
                                  group=group)
 
     def count_async(self, job=None, group=None):
+        # the per-block counts ride a nonblocking handle: the task fn only
+        # DISPATCHES the reads, and the scheduler awaits the handle after
+        # releasing the worker's job lock (core/job.py _settle) — so the
+        # next task's tracing/planning overlaps this one's in-flight device
+        # work instead of queueing behind a blocking device_get
         def act(blocks):
-            total = 0
-            for b in blocks:
-                total += int(jax.device_get(ex.count_block(b)))
-            return total
+            counts = [ex.count_block(b) for b in blocks]
+            return comm.CollHandle(
+                "action.count", None, counts,
+                transform=lambda cs: sum(int(c) for c in jax.device_get(cs)))
 
         return self._submit("count", act, job=job, group=group)
 
@@ -453,7 +459,9 @@ class IDataFrame:
         def act(blocks):
             b = concat_blocks(blocks)
             vfn = lambda a, c: jax.tree.map(fn, a, c)  # noqa: E731
-            return jax.device_get(ex.pairwise_reduce(b.data, b.valid, vfn, identity))
+            out = ex.pairwise_reduce(b.data, b.valid, vfn, identity)
+            return comm.CollHandle("action.reduce", None, out,
+                                   transform=jax.device_get)
 
         return self._submit("reduce", act, job=job, group=group)
 
@@ -523,10 +531,15 @@ class IDataFrame:
 
     def collect_async(self, job=None, group=None):
         def act(blocks):
-            out = []
-            for b in blocks:
-                out.extend(to_host(b))
-            return out
+            def tx(_ready):
+                out = []
+                for b in blocks:
+                    out.extend(to_host(b))
+                return out
+
+            return comm.CollHandle(
+                "action.collect", None,
+                [(b.data, b.valid) for b in blocks], transform=tx)
 
         return self._submit("collect", act, job=job, group=group)
 

@@ -27,6 +27,11 @@ Injection sites (threaded through the runtime):
                       ``name``, ``kind``, ``attempt``
   ``reshard``         communicator edges (``cluster.py`` importData /
                       native args, ``job.py`` inter-group edges): ``kind``
+  ``comm.handle``     awaiting a still-pending nonblocking collective
+                      (``comm.py`` ``CollHandle.wait``, and the scheduler's
+                      end-of-task drain of never-awaited handles): ``coll``
+                      (allreduce/gather/alltoall/…), ``phase`` (``wait`` /
+                      ``flush``)
   ==================  =====================================================
 
 Rules match a site plus a subset of the info keys; string values match via
@@ -149,6 +154,13 @@ class FaultPlan:
     def fail_reshard(self, kind: str = "*", attempt: int = 0) -> "FaultPlan":
         """Fail a communicator edge (importData / native / group)."""
         return self.fail("reshard", kind=kind, attempt=attempt)
+
+    def kill_handle(self, coll: str = "*", attempt: int = 0,
+                    phase: str = "*") -> "FaultPlan":
+        """Kill a pending nonblocking collective as it is awaited: the k-th
+        wait (or end-of-task ``flush``) of a matching in-flight handle fails
+        as if the transfer was lost mid-flight."""
+        return self.fail("comm.handle", coll=coll, phase=phase, attempt=attempt)
 
     # ---- deterministic sampling ----------------------------------------
     def choice(self, seq):

@@ -30,7 +30,7 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
-from repro.core import faults
+from repro.core import comm, faults
 from repro.core.dag import _OverlayMemo
 
 _task_ids = itertools.count()
@@ -48,7 +48,7 @@ class JobTask:
         "id", "name", "kind", "worker", "fn", "deps", "dependents",
         "remaining", "state", "result", "error", "event", "callbacks",
         "cb_lock", "scheduler", "t_submit", "t_start", "t_end",
-        "group", "node", "lock", "attempt", "attempts",
+        "group", "node", "lock", "attempt", "attempts", "lock_dropped",
     )
 
     def __init__(self, name: str, kind: str, worker, fn: Callable[[], Any],
@@ -91,6 +91,11 @@ class JobTask:
             attempts = props.get_int("ignis.task.attempts", 1) if props else 1
         self.attempt = 0
         self.attempts = max(1, int(attempts))
+        # set by JobScheduler._settle when the runner hands the task's lock
+        # off early (awaiting a nonblocking collective with no more
+        # lock-protected work left); the acquiring frame then skips its
+        # paired release
+        self.lock_dropped = False
         if worker is None:
             self.lock = None
         elif group is not None and hasattr(worker, "group_lock"):
@@ -207,6 +212,8 @@ class JobScheduler:
             "gang_tasks": 0,       # tasks run on a group communicator
             "group_reshards": 0,   # inter-group reshard edges executed
             "task_retries": 0,     # recoverable-failure re-runs (faults.py)
+            "coll_awaits": 0,      # handle-valued task results awaited here
+            "coll_flushed": 0,     # never-awaited handles drained at task end
         }
 
     # ------------------------------------------------------------------
@@ -293,7 +300,7 @@ class JobScheduler:
                         self.stats["helped_runs"] += 1
                     self._run_locked(foreign)
                 finally:
-                    if lock is not None:
+                    if lock is not None and not foreign.lock_dropped:
                         lock.release()
                 return True
         return False
@@ -309,7 +316,7 @@ class JobScheduler:
         try:
             self._run_locked(task)
         finally:
-            if lock is not None:
+            if lock is not None and not task.lock_dropped:
                 lock.release()
 
     def _unclaim_locked(self, task: JobTask):
@@ -320,6 +327,46 @@ class JobScheduler:
             if t is task:
                 del self._claimable[i]
                 return
+
+    def _settle(self, task, result, pending, held):
+        """Complete a task's nonblocking collectives: await a handle-valued
+        result, then flush every handle the task created but never awaited
+        (the never-awaited-at-job-end rule — docs/fault_tolerance.md).
+
+        The award of the nonblocking design happens here: when this thread
+        holds the task's serialisation lock only for THIS task (not
+        re-entrantly from an outer frame), the lock is DROPPED for good
+        before the await — the task's own mutations are complete, only
+        in-flight device work remains — so the next task on the same
+        worker/group starts its tracing and planning while this one's
+        collectives drain. The drop is one-way: re-acquiring here could
+        deadlock against a peer that took the lock and is now parked on
+        THIS task's event (IFuture's cooperative wait holds its locks).
+        ``task.lock_dropped`` tells the acquiring frame (_run/_help) to
+        skip its paired release; a retry after a fault injected at the
+        ``comm.handle`` site re-runs the fn unlocked — a group slice
+        briefly oversubscribed is explicitly tolerated (cluster.group_lock),
+        never corrupted, since every task binds its own communicator."""
+        if not (comm.is_handle(result) or pending):
+            return result
+        lock = task.lock
+        drop = (lock is not None and not task.lock_dropped
+                and not any(lock is l for l in held))
+        if drop:
+            task.lock_dropped = True
+            lock.release()
+        if comm.is_handle(result):
+            result = result.wait()
+            with self._lock:
+                self.stats["coll_awaits"] += 1
+        flushed = 0
+        while pending:
+            pending[-1].wait(_phase="flush")  # deregisters from the scope
+            flushed += 1
+        if flushed:
+            with self._lock:
+                self.stats["coll_flushed"] += flushed
+        return result
 
     def _run_locked(self, task: JobTask):
         with self._lock:
@@ -356,14 +403,32 @@ class JobScheduler:
                         # (None → base mesh)
                         if worker is not None and hasattr(worker, "use_group"):
                             with worker.use_group(task.group):
-                                task.result = task.fn()
+                                with comm.track() as pending:
+                                    task.result = task.fn()
                         else:
-                            task.result = task.fn()
+                            with comm.track() as pending:
+                                task.result = task.fn()
+                        # a task completes only when its collectives do:
+                        # await a handle-valued result (MPI_Wait on the
+                        # device; releases the GIL and — when safe — the
+                        # task's own lock, so peer tasks keep running), then
+                        # drain handles the task issued but never awaited —
+                        # an in-flight collective must not outlive its task,
+                        # and an injected fault on either re-enters THIS
+                        # retry loop, re-running the task fn and re-issuing
+                        # its collectives.
+                        task.result = self._settle(task, task.result,
+                                                   pending, held)
                         break
                     except BaseException as e:
                         task.attempt += 1
                         if task.attempt >= task.attempts or not faults.recoverable(e):
                             raise
+                        if task.lock_dropped:
+                            # the settle handed the lock off before faulting;
+                            # the retry runs unlocked (see _settle), so stop
+                            # advertising the lock to nested cooperative waits
+                            self._local.held_locks = held
                         with self._lock:
                             self.stats["task_retries"] += 1
             finally:
@@ -716,6 +781,12 @@ class IJob:
             "failed": by_state.get(FAILED, 0),
             "workers": sorted({t.worker.name for t in self.tasks if t.worker}),
             "wall_ms": (time.perf_counter() - self._t0) * 1e3,
+            # collective-engine telemetry (process-wide: persistent-plan
+            # cache + handles; docs/collectives.md) and this scheduler's
+            # handle settlement counters
+            "coll": {**comm.comm_stats(),
+                     "awaits": self.scheduler.stats["coll_awaits"],
+                     "flushed": self.scheduler.stats["coll_flushed"]},
         }
 
     def explain(self) -> str:

@@ -39,7 +39,7 @@ from typing import Callable
 import jax
 import numpy as np
 
-from repro.core import faults
+from repro.core import comm, faults
 from repro.core import shuffle as sh
 from repro.core.partition import Block, block_aval as _block_aval, block_devices, place_block
 
@@ -271,7 +271,12 @@ class ShuffleManager:
         out, ovf, fill = run(sh.capacity_for(factor, n_local, self.p))
         if self.p > 1:
             self._bump("overflow_checks")
-            n_ovf, n_fill = (int(x) for x in jax.device_get((ovf, fill)))
+            # the deferred check rides a nonblocking handle: the overflow
+            # scalars are the only host sync a wide stage performs, and the
+            # handle gives them the same fault surface (``comm.handle``)
+            # and telemetry as every other in-flight collective
+            h = comm.CollHandle("shuffle.capacity", self.ctx, (ovf, fill))
+            n_ovf, n_fill = (int(x) for x in jax.device_get(h.wait()))
             if n_ovf > 0:
                 self._bump("overflow_retries")
                 faults.check("shuffle.overflow", kind="capacity", fill=n_fill)
@@ -391,8 +396,8 @@ class ShuffleManager:
             rows, ok, eovf, lfill, rfill, fovf = fn(lb.data, lb.valid, rb.data, rb.valid)
             # one deferred check covers both exchanges AND the fan-out bound
             self._bump("overflow_checks")
-            n_e, n_lf, n_rf, n_f = (int(x) for x in jax.device_get(
-                (eovf, lfill, rfill, fovf)))
+            h = comm.CollHandle("shuffle.join", self.ctx, (eovf, lfill, rfill, fovf))
+            n_e, n_lf, n_rf, n_f = (int(x) for x in jax.device_get(h.wait()))
             if n_e == 0 and n_f == 0:
                 break
             if attempts >= self.MAX_ATTEMPTS:

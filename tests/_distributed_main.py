@@ -117,6 +117,34 @@ def main():
     except ValueError:
         check("alltoall_indivisible_raises", True)
 
+    # ---- nonblocking + persistent conformance at p=8 ------------------------
+    # (the p=1 matrix is tests/test_collectives.py; here the wire patterns
+    # are real 8-way exchanges, checked against the same NumPy oracles)
+    a2a_i = comm.ialltoall(
+        ctx, comm.shard_rows(ctx, jnp.arange(64, dtype=jnp.int32))).wait()
+    check("ialltoall_transpose_8way", np.array_equal(
+        np.asarray(a2a_i), np.arange(64).reshape(8, 8).T.reshape(-1)))
+    xi = comm.shard_rows(ctx, jnp.arange(16, dtype=jnp.int32) - 16)
+    check("iallreduce_max_all_negative_int",
+          int(comm.iallreduce(ctx, xi, op="max").wait()) == -1)
+    ex = comm.exscan(ctx, comm.shard_rows(ctx, jnp.ones(8, jnp.int32)))
+    check("exscan_rank_prefix", np.array_equal(np.asarray(ex), np.arange(8)))
+    plan8 = comm.persistent(ctx, "allreduce", x)
+    s0 = comm.comm_stats()
+    # a HELD plan skips the cache entirely (init-once/invoke-many): no
+    # misses, and no lookups either
+    reps = [float(plan8(x)) for _ in range(3)]
+    s1 = comm.comm_stats()
+    check("persistent_invoke_many_stable",
+          reps == [float(np.arange(16).sum())] * 3)
+    # re-RESOLVING the same (coll, mesh, aval) key must be pure cache hits
+    for _ in range(2):
+        comm.persistent(ctx, "allreduce", x)
+    s2 = comm.comm_stats()
+    check("persistent_plan_cache_hit_8way",
+          s2["coll_plan_misses"] == s0["coll_plan_misses"]
+          and s2["coll_plan_hits"] >= s1["coll_plan_hits"] + 2)
+
     # ---- communicator groups (MPI_Comm_split over the mesh) ----------------
     g0, g1 = ctx.split(2)
     check("split_sizes", g0.executors == 4 and g1.executors == 4)
@@ -140,6 +168,16 @@ def main():
     # to the OTHER group (device_put sub-mesh -> sub-mesh)
     check("intergroup_reshard_collective",
           float(comm.allreduce(g1, x0)) == 28.0)
+    # nonblocking handles are group-portable and await out of ORDER: world
+    # and both halves in flight together, drained newest-first
+    h_w = comm.iallreduce(
+        ctx, comm.shard_rows(ctx, jnp.arange(16, dtype=jnp.float32)))
+    h_0 = comm.iallreduce(g0, x0)
+    h_1 = comm.igather(g1, x1)
+    check("out_of_order_group_awaits",
+          np.array_equal(np.asarray(h_1.wait()),
+                         np.arange(8, 16, dtype=np.float32))
+          and float(h_0.wait()) == 28.0 and float(h_w.wait()) == 120.0)
     # nested split: a group is itself splittable
     n0, n1 = g0.split(2)
     check("nested_split", n0.executors == 2

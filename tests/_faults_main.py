@@ -248,6 +248,44 @@ def main():
     check("p8_blacklist_restore", w.context.group([4, 5]).executors == 2)
     check("p8_blacklist_restore_groups", w.groups(4) is gs_cached)
 
+    # ---- nonblocking collective handles over the real mesh ----------------
+    from repro.core import comm  # noqa: E402
+
+    recovers("p8_kill_pending_handle",
+             lambda: w.parallelize(vals).map(lambda x: x + 1),
+             lambda df: df.count(),
+             FaultPlan().kill_handle(coll="action.count", attempt=0))
+
+    ctx8 = w.context
+    x8 = comm.shard_rows(ctx8, jnp.arange(16, dtype=jnp.float32))
+    with faults.inject(FaultPlan().kill_handle(coll="allreduce",
+                                               attempt=0)) as p_dw:
+        h8 = comm.iallreduce(ctx8, x8)
+        try:
+            h8.wait()
+            check("p8_handle_kill_fires", False)
+        except faults.FaultInjected:
+            check("p8_handle_kill_fires", True)
+        check("p8_double_wait_reposts", float(h8.wait()) == 120.0
+              and float(h8.wait()) == 120.0 and p_dw.injections() == 1)
+
+    @ignis_export("p8_leaky_app")
+    def p8_leaky_app(ctx_, data=None, valid=None):
+        comm.iallreduce(ctx_, comm.shard_rows(
+            ctx_, jnp.arange(8, dtype=jnp.float32)))  # never awaited
+        return data, valid
+
+    sched8 = default_scheduler()
+    f0 = sched8.stats["coll_flushed"]
+    check("p8_leaked_handle_flushed",
+          w.call("p8_leaky_app", w.parallelize(vals)).count() == len(vals)
+          and sched8.stats["coll_flushed"] >= f0 + 1)
+    recovers("p8_kill_flush_of_leaked_handle",
+             lambda: w.call("p8_leaky_app", w.parallelize(vals)),
+             lambda df: df.count(),
+             FaultPlan().kill_handle(coll="allreduce", phase="flush",
+                                     attempt=0))
+
     print("ALL_FAULTS_OK")
 
 

@@ -1,0 +1,231 @@
+"""Collective conformance suite (docs/collectives.md): every collective ×
+dtype × communicator, each call shape — blocking facade, nonblocking
+``i*`` handle, persistent plan — must be BIT-identical to a NumPy oracle.
+p=1 makes most wire patterns the identity, which is exactly what makes
+the oracle exact; the 8-way shapes live in tests/_distributed_main.py.
+
+The dtype axis exists because of history: PR 2 fixed reduction identities
+that were silently wrong for ints (an all-negative max must not return
+the f32 identity 0), so max/min run against all-negative / all-positive
+int operands here, per call shape, forever.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ICluster, IProperties, IWorker, comm
+
+
+@pytest.fixture(scope="module")
+def worker():
+    return IWorker(ICluster(IProperties()), "python")
+
+
+def _ctx(worker, kind):
+    # "world" is the flat base communicator; "group" is MPI_Comm_create on
+    # rank {0} — at p=1 the same span, but a DISTINCT context/mesh-keyed
+    # plan, so group-portability of every call shape is exercised
+    return worker.context if kind == "world" else worker.context.group([0])
+
+
+_DTYPES = {
+    "f32": np.array([2.5, -1.25, 0.5, 3.0], np.float32),
+    "i32": np.array([7, -3, 11, 0], np.int32),
+    "bool": np.array([True, False, True, True], np.bool_),
+}
+
+# (collective, op) → NumPy oracle at p=1. bool skips sum (MPI has no
+# well-defined MAX/MIN/SUM promotion for logicals beyond lor/land — we
+# map them onto max/min).
+_REDUCE_OPS = {
+    "sum": np.sum,
+    "max": np.max,
+    "min": np.min,
+}
+
+
+def _assert_bits(got, exp):
+    got = np.asarray(got)
+    exp = np.asarray(exp)
+    assert got.dtype == exp.dtype, (got.dtype, exp.dtype)
+    assert got.shape == exp.shape, (got.shape, exp.shape)
+    assert np.array_equal(got, exp), (got, exp)
+
+
+# bool × sum is not generated: bool reduces via max/min (lor/land), there
+# is no MPI_SUM for logicals to conform to
+_ALLREDUCE_CASES = [(d, o) for d in sorted(_DTYPES) for o in sorted(_REDUCE_OPS)
+                    if (d, o) != ("bool", "sum")]
+
+
+@pytest.mark.parametrize("kind", ["world", "group"])
+@pytest.mark.parametrize("dtype,op", _ALLREDUCE_CASES)
+def test_allreduce_conformance(worker, kind, dtype, op):
+    ctx = _ctx(worker, kind)
+    x = comm.shard_rows(ctx, _DTYPES[dtype])
+    exp = np.asarray(_REDUCE_OPS[op](_DTYPES[dtype]), _DTYPES[dtype].dtype)
+    _assert_bits(comm.allreduce(ctx, x, op), exp)          # blocking
+    _assert_bits(comm.iallreduce(ctx, x, op).wait(), exp)  # nonblocking
+    plan = comm.persistent(ctx, "allreduce", x, op=op)     # persistent
+    _assert_bits(plan(x), exp)
+    _assert_bits(plan.start(x).wait(), exp)
+    _assert_bits(comm.reduce(ctx, x, op), exp)             # root variant
+
+
+@pytest.mark.parametrize("kind", ["world", "group"])
+@pytest.mark.parametrize("dtype", sorted(_DTYPES))
+@pytest.mark.parametrize("coll", ["bcast", "scatter", "gather", "alltoall",
+                                  "ppermute"])
+def test_data_movement_conformance(worker, kind, dtype, coll):
+    """At p=1 every movement pattern is the identity permutation — any
+    other output means rows went to the wrong peer."""
+    ctx = _ctx(worker, kind)
+    arr = _DTYPES[dtype]
+    x = comm.shard_rows(ctx, arr) if coll != "bcast" else arr
+    blocking = getattr(comm, coll)
+    nonblocking = getattr(comm, "i" + coll)
+    _assert_bits(blocking(ctx, x), arr)
+    _assert_bits(nonblocking(ctx, x).wait(), arr)
+    if coll in ("bcast", "scatter"):  # placement-only plans
+        plan = comm.persistent(ctx, coll)
+    else:
+        plan = comm.persistent(ctx, coll, x)
+    _assert_bits(plan(x), arr)
+
+
+@pytest.mark.parametrize("kind", ["world", "group"])
+@pytest.mark.parametrize("dtype", ["f32", "i32"])
+def test_exscan_conformance(worker, kind, dtype):
+    ctx = _ctx(worker, kind)
+    one = _DTYPES[dtype][:1]  # (p,) = (1,) per-rank scalar
+    x = comm.shard_rows(ctx, one)
+    exp = np.zeros(1, one.dtype)  # rank 0's exclusive prefix is empty
+    _assert_bits(comm.exscan(ctx, x), exp)
+    _assert_bits(comm.iexscan(ctx, x).wait(), exp)
+    _assert_bits(comm.persistent(ctx, "exscan", x)(x), exp)
+
+
+@pytest.mark.parametrize("kind", ["world", "group"])
+def test_barrier_conformance(worker, kind):
+    ctx = _ctx(worker, kind)
+    assert comm.barrier(ctx) is None
+    h = comm.ibarrier(ctx)
+    assert h.wait() is None and h.done()
+    assert comm.persistent(ctx, "barrier")() is None
+
+
+@pytest.mark.parametrize("op", ["max", "min"])
+def test_int_identity_edge_cases(worker, op):
+    """PR 2's bug class: the f32 identity (0 / ±inf cast) leaking into an
+    int reduction. An all-negative max and an all-positive min have no
+    zero in their range, so a wrong identity changes the answer."""
+    ctx = worker.context
+    arr = (np.array([-5, -3, -9], np.int32) if op == "max"
+           else np.array([7, 3, 9], np.int32))
+    exp = np.asarray(_REDUCE_OPS[op](arr), arr.dtype)
+    x = comm.shard_rows(ctx, arr)
+    _assert_bits(comm.allreduce(ctx, x, op), exp)
+    _assert_bits(comm.iallreduce(ctx, x, op).wait(), exp)
+    _assert_bits(comm.persistent(ctx, "allreduce", x, op=op)(x), exp)
+
+
+class _FakeCtx:
+    executors = 4
+    axis = "data"
+
+
+def test_ialltoall_rejects_indivisible_rows_at_dispatch():
+    """The i* variant must raise at DISPATCH (handle creation), not at
+    wait: an invalid exchange never enters flight."""
+    with pytest.raises(ValueError, match="divisible"):
+        comm.ialltoall(_FakeCtx(), jnp.arange(6, dtype=jnp.int32))
+    with pytest.raises(ValueError, match="divisible"):
+        comm.persistent(_FakeCtx(), "alltoall", jnp.arange(8, dtype=jnp.int32))
+
+
+def test_unknown_ops_rejected(worker):
+    ctx = worker.context
+    x = comm.shard_rows(ctx, np.arange(4, dtype=np.int32))
+    with pytest.raises(ValueError, match="allreduce op"):
+        comm.allreduce(ctx, x, op="prod")
+    with pytest.raises(ValueError, match="exscan"):
+        comm.iexscan(ctx, x, op="max")
+    with pytest.raises(ValueError, match="unknown collective"):
+        comm.persistent(ctx, "alltoallv", x)
+    with pytest.raises(ValueError, match="prototype"):
+        comm.persistent(ctx, "allreduce")
+
+
+# ---------------------------------------------------------------------------
+# handle semantics (MPI_Test / MPI_Wait contract)
+# ---------------------------------------------------------------------------
+
+
+def test_handle_wait_is_idempotent(worker):
+    ctx = worker.context
+    x = comm.shard_rows(ctx, np.arange(8, dtype=np.float32))
+    h = comm.iallreduce(ctx, x)
+    v1 = h.wait()
+    v2 = h.wait()  # double-wait: same completed value, no re-dispatch
+    assert v1 is v2 and h.done()
+    ok, v3 = h.test()
+    assert ok and v3 is v1
+
+
+def test_handle_test_and_chain(worker):
+    ctx = worker.context
+    x = comm.shard_rows(ctx, np.arange(8, dtype=np.float32))
+    h = comm.igather(ctx, x).chain(lambda v: np.asarray(v) + 1)
+    _assert_bits(h.wait(), np.arange(8, dtype=np.float32) + 1)
+    # chaining a completed handle applies immediately
+    h2 = comm.igather(ctx, x)
+    h2.wait()
+    _assert_bits(h2.chain(lambda v: np.asarray(v) * 2).wait(),
+                 np.arange(8, dtype=np.float32) * 2)
+
+
+def test_wait_all_and_out_of_order(worker):
+    ctx = worker.context
+    xs = [comm.shard_rows(ctx, np.full(4, i, np.float32)) for i in range(6)]
+    handles = [comm.iallreduce(ctx, x) for x in xs]
+    # await in reverse — completion order must not affect values
+    for i in reversed(range(6)):
+        _assert_bits(handles[i].wait(), np.float32(4 * i))
+    handles = [comm.iallreduce(ctx, x) for x in xs]
+    got = comm.wait_all(handles)
+    for i, v in enumerate(got):
+        _assert_bits(v, np.float32(4 * i))
+
+
+def test_plan_cache_hits_and_identical_results(worker):
+    """Init-once/invoke-many: the second persistent() for the same
+    (coll, aval, mesh) is a cache HIT and must return identical bits."""
+    ctx = worker.context
+    x = comm.shard_rows(ctx, np.arange(16, dtype=np.float32))
+    before = comm.comm_stats()
+    a = comm.persistent(ctx, "allreduce", x)(x)
+    after_first = comm.comm_stats()
+    b = comm.persistent(ctx, "allreduce", x)(x)
+    after = comm.comm_stats()
+    _assert_bits(a, b)
+    assert after["coll_plan_hits"] > after_first["coll_plan_hits"]
+    assert after["coll_plan_misses"] == after_first["coll_plan_misses"]
+    assert after["coll_calls"] >= before["coll_calls"] + 2
+
+
+def test_group_plans_keyed_separately(worker):
+    """A group communicator must never reuse the flat world's compiled
+    plan: the key includes the (sub)mesh."""
+    ctx = worker.context
+    g = ctx.group([0])
+    x = np.arange(4, dtype=np.float32)
+    base = comm.comm_stats()["coll_plan_misses"]
+    comm.allreduce(ctx, comm.shard_rows(ctx, x))
+    mid = comm.comm_stats()["coll_plan_misses"]
+    comm.allreduce(g, comm.shard_rows(g, x))
+    assert comm.comm_stats()["coll_plan_misses"] >= mid
+    # …but repeating on the same group hits
+    h0 = comm.comm_stats()["coll_plan_hits"]
+    comm.allreduce(g, comm.shard_rows(g, x))
+    assert comm.comm_stats()["coll_plan_hits"] > h0
+    assert comm.comm_stats()["coll_plan_misses"] >= base

@@ -264,3 +264,84 @@ def test_join_terminal_with_injected_kill(ls, rs, seed):
                   int(np.asarray(x["value"][1]))) for x in rows)
     exp = sorted((ka, va, vb) for ka, va in ls for kb, vb in rs if ka == kb)
     assert got == exp and plan.injections() == 1
+
+
+# ---------------------------------------------------------------------------
+# nonblocking collectives (docs/collectives.md): random await interleavings
+# and persistent-plan reuse must be invisible — always the in-order
+# blocking oracle's bits
+# ---------------------------------------------------------------------------
+
+_COLL_OPS = ["allreduce_sum", "allreduce_max", "allreduce_min", "gather",
+             "ppermute", "alltoall"]
+
+
+def _coll_dispatch(ctx, name, arr):
+    from repro.core import comm
+
+    x = comm.shard_rows(ctx, arr)
+    if name.startswith("allreduce"):
+        return comm.iallreduce(ctx, x, op=name.split("_")[1])
+    if name == "gather":
+        return comm.igather(ctx, x)
+    if name == "ppermute":
+        return comm.ippermute(ctx, x, shift=1)
+    return comm.ialltoall(ctx, x)
+
+
+def _coll_oracle(name, arr):
+    if name == "allreduce_sum":
+        return np.asarray(arr.sum(), arr.dtype)
+    if name == "allreduce_max":
+        return np.asarray(arr.max(), arr.dtype)
+    if name == "allreduce_min":
+        return np.asarray(arr.min(), arr.dtype)
+    return arr  # p=1: every movement pattern is the identity
+
+
+@given(st.lists(st.tuples(st.sampled_from(_COLL_OPS),
+                          st.integers(0, 1),  # which communicator
+                          st.lists(st.integers(-2**15, 2**15 - 1),
+                                   min_size=1, max_size=16)),
+                min_size=1, max_size=8),
+       st.integers(0, 10**6))
+@_settings
+def test_interleaved_nonblocking_collectives_match_blocking_oracle(seq, seed):
+    """A random sequence of nonblocking collectives, split across the flat
+    world and a group communicator, ALL dispatched before ANY is awaited,
+    then drained in a seeded random order — every value must equal the
+    in-order blocking oracle for its own operands."""
+    w = worker()
+    ctxs = (w.context, w.context.group([0]))
+    inflight = []
+    for name, which, xs in seq:
+        arr = np.asarray(xs, np.int32)
+        inflight.append((_coll_dispatch(ctxs[which], name, arr),
+                         _coll_oracle(name, arr)))
+    order = list(range(len(inflight)))
+    FaultPlan(seed=seed).rng.shuffle(order)
+    for i in order:
+        h, exp = inflight[i]
+        got = np.asarray(h.wait())
+        assert got.dtype == exp.dtype and np.array_equal(got, exp), (got, exp)
+
+
+@given(st.lists(st.integers(-2**15, 2**15 - 1), min_size=1, max_size=32),
+       st.integers(2, 5))
+@_settings
+def test_persistent_plan_reuse_never_changes_results(xs, reps):
+    """Init-once/invoke-many: repeated invocations of one persistent plan
+    (pure cache hits after the first) return identical bits, and the miss
+    counter stays flat across the repeats."""
+    from repro.core import comm
+
+    ctx = worker().context
+    arr = np.asarray(xs, np.int32)
+    x = comm.shard_rows(ctx, arr)
+    plan = comm.persistent(ctx, "allreduce", x)
+    first = np.asarray(plan(x))
+    m0 = comm.comm_stats()["coll_plan_misses"]
+    for _ in range(reps):
+        again = np.asarray(comm.persistent(ctx, "allreduce", x)(x))
+        assert np.array_equal(again, first)
+    assert comm.comm_stats()["coll_plan_misses"] == m0

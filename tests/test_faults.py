@@ -494,6 +494,95 @@ def test_job_memo_reuse_is_scoped_to_the_job(worker):
 
 
 # ---------------------------------------------------------------------------
+# nonblocking collective handles (the comm.handle site — docs/collectives.md)
+# ---------------------------------------------------------------------------
+
+
+def test_kill_pending_handle_retries_task(worker):
+    """A handle-valued action result killed mid-await re-enters the task's
+    retry loop: the fn re-runs, re-issues its collective, and the job
+    converges with EXACTLY one retry."""
+
+    def build():
+        return worker.parallelize(_ints(48)).map(lambda x: x + 1)
+
+    _assert_recovers(build, lambda df: df.count(),
+                     FaultPlan().kill_handle(coll="action.count", attempt=0))
+
+
+def test_double_wait_after_fault_and_idempotency(worker):
+    """MPI_Wait semantics under chaos: a kill leaves the handle PENDING (the
+    transfer was lost, not completed), so wait may be re-posted; once it
+    completes, further waits return the same value WITHOUT re-checking the
+    fault site (idempotent completion)."""
+    from repro.core import comm
+
+    ctx = worker.context
+    x = comm.shard_rows(ctx, jnp.arange(8, dtype=jnp.float32))
+    with faults.inject(FaultPlan().kill_handle(coll="allreduce",
+                                               attempt=0)) as plan:
+        h = comm.iallreduce(ctx, x)
+        with pytest.raises(FaultInjected):
+            h.wait()
+        # the kill left the handle un-awaited (done() may still report
+        # device readiness — MPI_Test on the wire — but completion state
+        # is what re-arms the fault site)
+        assert "pending" in repr(h)
+        assert float(h.wait()) == 28.0  # re-posted wait completes
+        assert float(h.wait()) == 28.0  # idempotent: site not re-checked
+    assert plan.injections() == 1
+
+
+def test_never_awaited_handle_flushed_at_task_end(worker):
+    """An in-flight collective must not outlive its task: a handle the fn
+    issued but never awaited is drained by the scheduler at task end and
+    counted in coll_flushed."""
+    from repro.core import comm
+
+    @ignis_export("leaky_app")
+    def leaky_app(ctx, data=None, valid=None):
+        comm.iallreduce(ctx, comm.shard_rows(
+            ctx, jnp.arange(4, dtype=jnp.float32)))  # never awaited
+        return data, valid
+
+    sched = default_scheduler()
+    f0 = sched.stats["coll_flushed"]
+    assert worker.call("leaky_app", worker.parallelize(_ints(16))).count() == 16
+    assert sched.stats["coll_flushed"] >= f0 + 1
+
+
+def test_kill_flush_of_leaked_handle_retries(worker):
+    """The end-of-task flush is a kill-point like any other: a fault there
+    re-runs the whole task fn (which re-issues the leaked collective)."""
+    from repro.core import comm
+
+    @ignis_export("leaky_app_chaos")
+    def leaky_app_chaos(ctx, data=None, valid=None):
+        comm.iallreduce(ctx, comm.shard_rows(
+            ctx, jnp.arange(4, dtype=jnp.float32)))
+        return data, valid
+
+    def build():
+        return worker.call("leaky_app_chaos", worker.parallelize(_ints(16)))
+
+    _assert_recovers(
+        build, lambda df: df.count(),
+        FaultPlan().kill_handle(coll="allreduce", phase="flush", attempt=0))
+
+
+def test_kill_handle_budget_exhaustion_surfaces(worker):
+    """Killing EVERY await of the action's handle exhausts the retry budget
+    and the fault surfaces through the future, like any task failure."""
+    def build():
+        return worker.parallelize(_ints(8))
+
+    with faults.inject(FaultPlan().fail("comm.handle", coll="action.count",
+                                        attempt=None)):
+        with pytest.raises(FaultInjected):
+            build().count()
+
+
+# ---------------------------------------------------------------------------
 # the p=8 chaos matrix (subprocess: the 8-device flag must not leak here)
 # ---------------------------------------------------------------------------
 
