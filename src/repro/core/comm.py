@@ -80,9 +80,16 @@ class CollHandle:
     the task never awaited is drained by the scheduler at task end, so a
     leaked in-flight collective can neither outlive its job silently nor
     escape fault accounting (the never-awaited-at-job-end chaos rule).
+
+    Completion is thread-safe: handles are group-portable across threads
+    (module docstring), so ``wait``/``test``/``chain`` may race — a
+    per-handle lock makes exactly one thread finalise (apply ``_transform``
+    and publish the value); every other waiter returns the same completed
+    value, never a double-transformed one.
     """
 
-    __slots__ = ("coll", "ctx", "id", "_value", "_transform", "_done", "_scope")
+    __slots__ = ("coll", "ctx", "id", "_value", "_transform", "_done", "_scope",
+                 "_lock")
 
     def __init__(self, coll: str, ctx, value, transform: Optional[Callable] = None):
         self.coll = coll
@@ -91,6 +98,7 @@ class CollHandle:
         self._value = value
         self._transform = transform
         self._done = False
+        self._lock = threading.Lock()
         scope = getattr(_scopes, "pending", None)
         self._scope = scope
         if scope is not None:
@@ -127,34 +135,38 @@ class CollHandle:
         drain) while the handle is still pending — an injected failure
         models losing the transfer mid-flight, and leaves the handle
         pending so a scheduler retry re-issues the collective."""
-        if self._done:
+        if self._done:  # fast path: _done is published AFTER _value (below)
             return self._value
-        faults.check("comm.handle", coll=self.coll, phase=_phase)
-        value = jax.block_until_ready(self._value)
-        if self._transform is not None:
-            value = self._transform(value)
-        self._value = value
-        self._done = True
-        self._transform = None
-        scope = self._scope
-        if scope is not None:
-            self._scope = None
-            try:
-                scope.remove(self)
-            except ValueError:
-                pass
+        with self._lock:
+            if self._done:  # another thread finalised while we waited
+                return self._value
+            faults.check("comm.handle", coll=self.coll, phase=_phase)
+            value = jax.block_until_ready(self._value)
+            if self._transform is not None:
+                value = self._transform(value)
+            self._value = value
+            self._transform = None
+            self._done = True  # publish: value must be stored first
+            scope = self._scope
+            if scope is not None:
+                self._scope = None
+                try:
+                    scope.remove(self)
+                except ValueError:
+                    pass
         _engine.stats_bump("handles_awaited")
         return self._value
 
     def chain(self, fn: Callable) -> "CollHandle":
         """Append a host-side transform applied to the awaited value (used
         by the driver layer to adapt app results without forcing a wait)."""
-        if self._done:
-            self._value = fn(self._value)
+        with self._lock:
+            if self._done:
+                self._value = fn(self._value)
+                return self
+            prev = self._transform
+            self._transform = fn if prev is None else (lambda v: fn(prev(v)))
             return self
-        prev = self._transform
-        self._transform = fn if prev is None else (lambda v: fn(prev(v)))
-        return self
 
     def __repr__(self):
         state = "done" if self._done else "pending"
@@ -209,6 +221,7 @@ class CommEngine:
     def __init__(self, plan_cache_size: int = 128):
         self.plan_cache_size = plan_cache_size
         self._plans: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self._building: dict = {}  # key -> Event: trace+jit in flight
         self._lock = threading.Lock()
         self.stats = {
             "coll_calls": 0,          # collectives dispatched (any shape)
@@ -224,20 +237,44 @@ class CommEngine:
             self.stats[key] += n
 
     def plan(self, key: tuple, builder: Callable[[], Callable]) -> Callable:
-        """The compiled plan for ``key``, building (trace + jit) on miss."""
-        with self._lock:
-            fn = self._plans.get(key)
-            if fn is not None:
-                self._plans.move_to_end(key)
-                self.stats["coll_plan_hits"] += 1
-                return fn
-            self.stats["coll_plan_misses"] += 1
-        fn = jax.jit(builder())
+        """The compiled plan for ``key``, building (trace + jit) on miss.
+
+        Exactly one thread builds a given key: a concurrent miss parks on
+        the builder's in-flight event and re-reads the cache, so two
+        threads racing the same collective cost one trace total and
+        ``coll_plan_misses`` counts distinct init-once events (the
+        ``recompiles=0`` gate in bench_collectives relies on this). The
+        build itself runs outside the lock — tracing can re-enter plan()
+        (nested collectives) and must not self-deadlock."""
+        while True:
+            with self._lock:
+                fn = self._plans.get(key)
+                if fn is not None:
+                    self._plans.move_to_end(key)
+                    self.stats["coll_plan_hits"] += 1
+                    return fn
+                building = self._building.get(key)
+                if building is None:
+                    self._building[key] = building = threading.Event()
+                    self.stats["coll_plan_misses"] += 1
+                    break
+            building.wait()  # builder finished (or failed) → re-read cache
+        try:
+            fn = jax.jit(builder())
+        except BaseException:
+            # failed build: unpark waiters with the cache still empty so
+            # one of them (or a retry) becomes the next builder
+            with self._lock:
+                self._building.pop(key, None)
+            building.set()
+            raise
         with self._lock:
             self._plans[key] = fn
+            self._building.pop(key, None)
             while len(self._plans) > self.plan_cache_size:
                 self._plans.popitem(last=False)
                 self.stats["coll_plan_evictions"] += 1
+        building.set()
         return fn
 
     def clear(self):

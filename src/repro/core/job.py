@@ -276,7 +276,8 @@ class JobScheduler:
         exhaustion under deeply nested cross-worker calls). Returns True if
         a task ran. A pool thread that also picked the task up blocks on
         the task lock, then finds it claimed (state != PENDING) and backs
-        off — no double run."""
+        off — no double run, and the backed-off frame always releases its
+        own acquire (see the per-frame release contract in _run)."""
         cand = foreign = None
         with self._lock:
             for t in self._claimable:
@@ -295,12 +296,13 @@ class JobScheduler:
         if foreign is not None:
             lock = foreign.lock
             if lock is None or lock.acquire(blocking=False):
+                claimed: list = []
                 try:
                     with self._lock:
                         self.stats["helped_runs"] += 1
-                    self._run_locked(foreign)
+                    self._run_locked(foreign, claimed)
                 finally:
-                    if lock is not None and not foreign.lock_dropped:
+                    if lock is not None and not (claimed and foreign.lock_dropped):
                         lock.release()
                 return True
         return False
@@ -309,14 +311,23 @@ class JobScheduler:
         # Acquire the task lock BEFORE claiming: a cooperative waiter that
         # already holds the lock can claim the task while a pool thread is
         # still parked on acquire; the late acquirer sees state != PENDING
-        # and backs off.
+        # and backs off. The release-skip is PER-FRAME, not per-task:
+        # ``task.lock_dropped`` describes the one frame that claimed and ran
+        # the task body (the only frame that can reach _settle's drop), so
+        # the paired release is skipped only when THIS frame is that frame
+        # (``claimed`` non-empty). A frame that parked on acquire, won the
+        # lock after the claiming helper dropped it, and backed off on
+        # state != PENDING must release its own acquisition — an RLock
+        # cannot be released from any other thread, so skipping here would
+        # leak the worker/group lock forever.
         lock = task.lock
         if lock is not None:
             lock.acquire()
+        claimed: list = []
         try:
-            self._run_locked(task)
+            self._run_locked(task, claimed)
         finally:
-            if lock is not None and not task.lock_dropped:
+            if lock is not None and not (claimed and task.lock_dropped):
                 lock.release()
 
     def _unclaim_locked(self, task: JobTask):
@@ -342,9 +353,12 @@ class JobScheduler:
         collectives drain. The drop is one-way: re-acquiring here could
         deadlock against a peer that took the lock and is now parked on
         THIS task's event (IFuture's cooperative wait holds its locks).
-        ``task.lock_dropped`` tells the acquiring frame (_run/_help) to
-        skip its paired release; a retry after a fault injected at the
-        ``comm.handle`` site re-runs the fn unlocked — a group slice
+        ``task.lock_dropped`` tells the CLAIMING frame (_run/_help, the one
+        whose ``_run_locked`` call ran the body — see ``claimed``) to skip
+        its paired release; any other frame that acquired the lock and
+        backed off still releases its own acquisition. A retry after a
+        fault injected at the ``comm.handle`` site re-runs the fn
+        unlocked — a group slice
         briefly oversubscribed is explicitly tolerated (cluster.group_lock),
         never corrupted, since every task binds its own communicator."""
         if not (comm.is_handle(result) or pending):
@@ -368,11 +382,15 @@ class JobScheduler:
                 self.stats["coll_flushed"] += flushed
         return result
 
-    def _run_locked(self, task: JobTask):
+    def _run_locked(self, task: JobTask, claimed: Optional[list] = None):
         with self._lock:
             if task.state != PENDING:  # cascaded failure or claimed elsewhere
-                return
+                return  # back-off: the caller's finally releases its acquire
             task.state = RUNNING
+            if claimed is not None:
+                # tell the calling frame it is the claiming frame — only then
+                # may it honour task.lock_dropped and skip its release
+                claimed.append(task)
             self._unclaim_locked(task)
             self._running += 1
             self.stats["max_concurrent"] = max(

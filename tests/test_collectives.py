@@ -229,3 +229,74 @@ def test_group_plans_keyed_separately(worker):
     comm.allreduce(g, comm.shard_rows(g, x))
     assert comm.comm_stats()["coll_plan_hits"] > h0
     assert comm.comm_stats()["coll_plan_misses"] >= base
+
+
+# ---------------------------------------------------------------------------
+# thread-safety (handles are group-portable ACROSS THREADS — PR 6 review)
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_waits_finalize_exactly_once(worker):
+    """Racing ``wait()``/``test()`` from many threads must apply the
+    handle's transform exactly once and hand every thread the same value —
+    the double-transform race the per-handle lock closes. ``handles_awaited``
+    must also count the handle once, not per waiter."""
+    import threading
+
+    ctx = worker.context
+    x = comm.shard_rows(ctx, np.arange(8, dtype=np.float32))
+    for _ in range(10):
+        calls = []
+        h = comm.igather(ctx, x).chain(
+            lambda v: (calls.append(1), np.asarray(v) + 1)[1])
+        awaited0 = comm.comm_stats()["handles_awaited"]
+        n = 8
+        barrier = threading.Barrier(n)
+        got = [None] * n
+
+        def waiter(i):
+            barrier.wait()
+            if i % 2:
+                ok, v = h.test()
+                got[i] = v if ok else h.wait()
+            else:
+                got[i] = h.wait()
+
+        threads = [threading.Thread(target=waiter, args=(i,)) for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(calls) == 1, f"transform applied {len(calls)} times"
+        assert comm.comm_stats()["handles_awaited"] == awaited0 + 1
+        for v in got:
+            _assert_bits(v, np.arange(8, dtype=np.float32) + 1)
+
+
+def test_plan_build_race_compiles_once(worker):
+    """Threads missing the same plan key concurrently must cost ONE
+    trace+jit total (late arrivals park on the in-flight build), so
+    ``coll_plan_misses`` counts distinct init-once events — the
+    ``recompiles=0`` gate in bench_collectives depends on this."""
+    import threading
+
+    ctx = worker.context
+    x = comm.shard_rows(ctx, np.arange(32, dtype=np.float32))
+    comm.engine().clear()  # force the next allreduce for this aval to miss
+    before = comm.comm_stats()["coll_plan_misses"]
+    n = 6
+    barrier = threading.Barrier(n)
+    outs = [None] * n
+
+    def go(i):
+        barrier.wait()
+        outs[i] = comm.allreduce(ctx, x)
+
+    threads = [threading.Thread(target=go, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert comm.comm_stats()["coll_plan_misses"] == before + 1
+    for v in outs:
+        _assert_bits(v, np.float32(np.arange(32, dtype=np.float32).sum()))

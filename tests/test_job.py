@@ -231,6 +231,37 @@ def test_nested_cross_worker_lineage_does_not_deadlock(cluster):
     assert default_scheduler().stats["helped_runs"] >= 1
 
 
+def test_backed_off_frame_releases_its_own_acquire():
+    """Regression (PR 6 review): ``task.lock_dropped`` describes the
+    CLAIMING frame — the one whose ``_run_locked`` ran the task body and
+    dropped the lock in ``_settle``. A pool thread that parked on acquire,
+    won the lock only after that drop, and backed off on state != PENDING
+    must still release its own acquisition: an RLock can never be released
+    from another thread, so skipping here would leak the worker lock and
+    block every subsequent task on that worker forever."""
+    import threading
+
+    from repro.core.job import DONE, JobScheduler, JobTask
+
+    class W:
+        pass
+
+    w = W()
+    w._job_lock = threading.RLock()
+    sched = JobScheduler()
+    stale = JobTask("stale", "action", w, lambda: 1, [])
+    # simulate the helper frame having claimed + run the task and dropped
+    # the lock in _settle while this frame was parked on acquire
+    stale.state = DONE
+    stale.lock_dropped = True
+    sched._run(stale)  # this frame: acquire → back off → MUST release
+    # symptom-level check: a follow-up task on the same worker lock runs
+    follow = JobTask("follow", "action", w, lambda: 42, [])
+    sched.submit(follow)
+    assert follow.event.wait(10), "worker lock leaked: follow-up never ran"
+    assert follow.result == 42 and follow.error is None
+
+
 def test_job_wait_returns_in_submission_order(worker):
     job = IJob("waitall")
     a = worker.parallelize(np.arange(6, dtype=np.int32))
