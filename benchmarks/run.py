@@ -9,6 +9,7 @@
   Fig 19-22  bench_hpc_native  native SPMD apps via worker.call (overhead %)
   §3.2/Fig 2 bench_hybrid      one IJob: native + MapReduce branches overlap
   §4 (UCC)   bench_collectives blocking vs nonblocking vs persistent plans
+  §11 (ours) bench_kernels     Pallas kernel tier vs jnp oracles, wide stages
   §2.2/§5    bench_groups      gang-scheduled jobs on disjoint sub-meshes
   Table 5    bench_sloc        integration SLOC
   (ours)     roofline          §Roofline summary from the dry-run artifacts
@@ -37,6 +38,7 @@ SMOKE_KWARGS = {
     "minebench": {},
     "hybrid": {"n": 1 << 14, "cg_iters": 400, "iters": 3, "n_cg": 1 << 16},
     "collectives": {"n": 1 << 10, "iters": 10},
+    "kernels": {"n": 20_000, "iters": 3},
     "groups": {"size": 2048, "cg_iters": 1000, "n": 1 << 10, "iters": 3},
     "recovery": {"n": 20_000, "iters": 3},
 }
@@ -51,6 +53,7 @@ BENCHES = [
     ("hpc_native", "benchmarks.bench_hpc_native"),
     ("hybrid", "benchmarks.bench_hybrid"),
     ("collectives", "benchmarks.bench_collectives"),
+    ("kernels", "benchmarks.bench_kernels"),
     ("groups", "benchmarks.bench_groups"),
     ("recovery", "benchmarks.bench_recovery"),
     ("sloc", "benchmarks.bench_sloc"),

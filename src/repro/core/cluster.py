@@ -28,6 +28,7 @@ from repro.core.native import get_app, load_library
 from repro.core.partition import Block, block_aval, concat_blocks, from_host, place_block
 from repro.core.properties import IProperties
 from repro.core.textlambda import ISource
+from repro.kernels.registry import KernelRegistry
 
 
 class Ignis:
@@ -122,6 +123,12 @@ class IWorker:
             join_max_matches=self.join_max_matches,
             plan_cache_size=cluster.props.get_int("ignis.shuffle.plan.cache.size", 64),
             headroom=cluster.props.get_float("ignis.shuffle.memory.headroom", 1.25),
+            kernels=KernelRegistry(
+                mode=cluster.props.get("ignis.kernels", "auto"),
+                blocks=cluster.props.get("ignis.kernels.blocks", "128,256,512"),
+                tune_cache_size=cluster.props.get_int(
+                    "ignis.kernels.tune.cache.size", 512),
+            ),
         )
         self._libraries: list[str] = []
         # job-scheduler serialisation points (core/job.py): the base lock
@@ -269,10 +276,13 @@ class IWorker:
     def shuffle_stats(self) -> dict:
         """Adaptive shuffle engine telemetry (DESIGN.md §6): exchanges,
         overflow/fan-out retries, deferred checks, capacity-memory hits,
-        wide-plan compiles/hits, bytes moved — plus the collective engine's
+        wide-plan compiles/hits, bytes moved — plus the kernel tier's
+        selection/autotune counters (``kernel_hits`` / ``kernel_fallbacks``
+        / ``autotune_runs``, docs/kernels.md) and the collective engine's
         persistent-plan and handle counters (DESIGN.md §10; process-wide,
         so two workers sharing one mesh see one set of plan counters)."""
-        return {**self.shuffle.stats, **comm_mod.comm_stats()}
+        return {**self.shuffle.stats, **self.shuffle.kernels.stats,
+                **comm_mod.comm_stats()}
 
     # ------------------------------------------------------------------
     # data ingestion (driver communicator)

@@ -262,6 +262,12 @@ class IDataFrame:
         return self.sort_by(lambda r: r["key"], ascending)
 
     def reduce_by_key(self, fn, identity=0) -> "IDataFrame":
+        """Merge values per key with ``fn`` (fused into the sort stage).
+
+        A builtin ``fn`` (traces to one add/max/min over a single
+        f32/i32 leaf) rides the Pallas kernel tier where the registry
+        selects it, bit-identically to the jnp path — the chosen tier
+        shows up in ``df.explain()`` (docs/kernels.md)."""
         fn = resolve(fn)
         worker = self.worker
 
@@ -409,8 +415,10 @@ class IDataFrame:
     def explain(self) -> str:
         """Physical plan for this frame's lineage: which narrow ops the
         planner fuses into single-dispatch stages (DESIGN.md §5), wide nodes
-        annotated with their shuffle capacity state, plus the shuffle
-        engine's telemetry summary (DESIGN.md §6)."""
+        annotated with their shuffle capacity state and — when the kernel
+        tier ran them — the kernel selection (``kernel=segment_reduce[...]
+        op=sum block=128``, docs/kernels.md), plus the shuffle engine's
+        telemetry summary (DESIGN.md §6) and kernel-registry counters."""
         mgr = getattr(self.worker, "shuffle", None)
         plan = self._engine.explain(self.node,
                                     annotate=mgr.annotate if mgr else None)

@@ -23,6 +23,15 @@ Injection sites (threaded through the runtime):
                       ``kind`` (sort/distinct/reduceByKey/groupByKey/
                       partitionBy/join), ``p``
   ``shuffle.overflow``the capacity-overflow retry path: ``kind``
+  ``kernel.stage``    a KERNEL-BACKED wide stage (``shuffle_plan.py``,
+                      docs/kernels.md) — fires only when the stage runs on
+                      the Pallas tier: ``kind``, ``kernel``
+                      (segment_reduce/bucket_route), ``p``. A task fault:
+                      the scheduler retries via lineage.
+  ``kernel.capability``the kernel tier's per-node capability check
+                      (``kernels/registry.py``): ``kernel``. NOT a task
+                      fault — an injected failure degrades the node to the
+                      plain-JAX fallback without erroring.
   ``job.task``        one scheduler attempt of a job task (``job.py``):
                       ``name``, ``kind``, ``attempt``
   ``reshard``         communicator edges (``cluster.py`` importData /
@@ -141,6 +150,17 @@ class FaultPlan:
     def fail_task(self, name: str, attempt: int = 0) -> "FaultPlan":
         """Fail a job task by (fnmatch) name on scheduler attempt k."""
         return self.fail("job.task", name=name, attempt=attempt)
+
+    def fail_kernel_stage(self, kind: str = "*", times: int = 1) -> "FaultPlan":
+        """Kill the next ``times`` kernel-backed wide stages (lineage retry)."""
+        return self.fail("kernel.stage", kind=kind, attempt=None, times=times)
+
+    def fail_kernel_capability(self, kernel: str = "*",
+                               times: Optional[int] = None) -> "FaultPlan":
+        """Fail kernel capability checks: the node degrades to the
+        plain-JAX fallback (no error, no retry — docs/kernels.md)."""
+        return self.fail("kernel.capability", kernel=kernel, attempt=None,
+                         times=times)
 
     def delay_task(self, name: str, seconds: float, attempt: int = 0) -> "FaultPlan":
         """Straggle a job task: sleep before its k-th scheduler attempt."""

@@ -30,6 +30,12 @@ DEFAULTS = {
     "ignis.task.speculative.timeout": "30",
     "ignis.fusion.enabled": "true",  # stage compilation (DESIGN.md §5)
     "ignis.fusion.plan.cache.size": "128",  # compiled-plan LRU entries
+    # kernel tier (docs/kernels.md): auto = compiled Pallas where the
+    # backend supports it, bit-identical plain-JAX fallback elsewhere;
+    # on / interpret / off force the choice (interpret = CI conformance)
+    "ignis.kernels": "auto",
+    "ignis.kernels.blocks": "128,256,512",  # autotune sweep candidates
+    "ignis.kernels.tune.cache.size": "512",  # autotune memo LRU entries
 }
 
 

@@ -70,7 +70,7 @@ def capacity_for(factor: float, n_local: int, p: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _pack_exchange(dest, payload, axis, p, C):
+def _pack_exchange(dest, payload, axis, p, C, route=None):
     """Inside shard_map: route rows to `dest` buckets with capacity C.
 
     dest: (n,) int32 in [0, p); payload: pytree of (n, …) leaves (must include
@@ -78,20 +78,32 @@ def _pack_exchange(dest, payload, axis, p, C):
     Dropped rows (bucket overflow) are counted, not silently lost; max_fill is
     the largest bucket demand observed — the capacity that *would* have fit,
     independent of C, so one retry sized from it always succeeds.
+
+    ``route`` (optional) is a kernel-backed router ``dest -> (pos, keep,
+    counts)`` (kernels/moe_route.bucket_route, docs/kernels.md): capacity
+    ordinals in row order — exactly the rank the stable argsort below
+    assigns, so kept rows land in the same unique slots and the packed
+    buffer is bit-identical; only the sliced-off overflow scratch slot can
+    differ (duplicate writes, different order).
     """
     n = dest.shape[0]
-    order = jnp.argsort(dest, stable=True)
-    ds = dest[order]
-    counts = jnp.bincount(ds, length=p)
-    starts = jnp.cumsum(counts) - counts
-    pos = jnp.arange(n) - starts[ds]
-    keep = pos < C
-    slot = jnp.where(keep, ds * C + pos, p * C)  # overflow → scratch slot
+    if route is not None:
+        pos, keep, counts = route(dest)
+        order = None  # rows scatter from row order directly
+        slot = jnp.where(keep, dest * C + pos, p * C)
+    else:
+        order = jnp.argsort(dest, stable=True)
+        ds = dest[order]
+        counts = jnp.bincount(ds, length=p)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(n) - starts[ds]
+        keep = pos < C
+        slot = jnp.where(keep, ds * C + pos, p * C)  # overflow → scratch slot
     overflow = (n - keep.sum()).astype(jnp.int32)
     max_fill = counts.max().astype(jnp.int32)
 
     def pack(x):
-        xs = x[order]
+        xs = x if order is None else x[order]
         buf = jnp.zeros((p * C + 1, *x.shape[1:]), x.dtype)
         buf = buf.at[slot].set(xs)
         return buf[: p * C]
@@ -169,10 +181,11 @@ def sort_stage(ctx: IContext, keys, valid, data, C: int, post=None):
     return fn(keys, valid, data)
 
 
-def hash_stage(ctx: IContext, keys, valid, data, C: int, post=None):
+def hash_stage(ctx: IContext, keys, valid, data, C: int, post=None, route=None):
     """One fused wide hash-exchange stage (partitionBy / reduce routing), no
     host syncs. Same contract as ``sort_stage``; equal keys land on one
-    executor but arrive unsorted."""
+    executor but arrive unsorted. ``route`` is the optional kernel-backed
+    bucket router (see ``_pack_exchange``)."""
     post = post or _passthrough
     p = ctx.executors
     zero = jnp.zeros((), jnp.int32)
@@ -183,7 +196,7 @@ def hash_stage(ctx: IContext, keys, valid, data, C: int, post=None):
         dest = (_hash_u32(k) % jnp.uint32(p)).astype(jnp.int32)
         dest = jnp.where(v, dest, p - 1)  # park invalid rows anywhere stable
         payload = {"k": k, "valid": v, "data": d}
-        out, overflow, fill = _pack_exchange(dest, payload, ctx.axis, p, C)
+        out, overflow, fill = _pack_exchange(dest, payload, ctx.axis, p, C, route)
         return (
             post(out["k"], out["valid"], out["data"]),
             jax.lax.psum(overflow, ctx.axis),
@@ -200,13 +213,15 @@ def hash_stage(ctx: IContext, keys, valid, data, C: int, post=None):
 
 
 def join_stage(ctx: IContext, lk, lvalid, lvals, rk, rvalid, rvals,
-               Cl: int, Cr: int, M: int):
+               Cl: int, Cr: int, M: int, route_l=None, route_r=None):
     """Both-side hash exchange + local sort-merge join in ONE wide stage.
 
     Returns ``(rows, ok, exch_overflow, lfill, rfill, fan_overflow)`` — four
     replicated int32 scalars fetched by the caller in a single deferred sync:
     exchange overflow retries with capacities sized from the fills; fan-out
-    overflow retries with a doubled per-key match bound M.
+    overflow retries with a doubled per-key match bound M. ``route_l`` /
+    ``route_r`` are per-side kernel-backed bucket routers (capacity-specific:
+    Cl ≠ Cr — see ``_pack_exchange``).
     """
     p = ctx.executors
     zero = jnp.zeros((), jnp.int32)
@@ -218,9 +233,9 @@ def join_stage(ctx: IContext, lk, lvalid, lvals, rk, rvalid, rvals,
         ldest = jnp.where(lv_, (_hash_u32(lk_) % jnp.uint32(p)).astype(jnp.int32), p - 1)
         rdest = jnp.where(rv_, (_hash_u32(rk_) % jnp.uint32(p)).astype(jnp.int32), p - 1)
         lout, lovf, lfill = _pack_exchange(
-            ldest, {"k": lk_, "valid": lv_, "data": ld_}, ctx.axis, p, Cl)
+            ldest, {"k": lk_, "valid": lv_, "data": ld_}, ctx.axis, p, Cl, route_l)
         rout, rovf, rfill = _pack_exchange(
-            rdest, {"k": rk_, "valid": rv_, "data": rd_}, ctx.axis, p, Cr)
+            rdest, {"k": rk_, "valid": rv_, "data": rd_}, ctx.axis, p, Cr, route_r)
         rows, ok, fovf = local_join(
             lout["k"], lout["valid"], lout["data"],
             rout["k"], rout["valid"], rout["data"], M)
@@ -341,6 +356,37 @@ def make_reduce_post(fn, identity):
         return {"key": data["key"], "value": red}, heads
 
     return post
+
+
+def make_reduce_post_kernel(op: str, identity, block: int, interpret: bool):
+    """reduceByKey on the kernel tier (docs/kernels.md): the Pallas
+    segmented scan + prefix pass replaces ``segmented_reduce``, fused into
+    the same wide stage. Only built for values the registry recognized as
+    a single supported-dtype leaf with a builtin op — bit-identical to
+    ``make_reduce_post`` for associative-exact data."""
+    from repro.kernels.segment_reduce.ops import segment_totals
+
+    def post(keys, valid, data):
+        leaves, treedef = jax.tree_util.tree_flatten(data["value"])
+        ident = jax.tree_util.tree_leaves(identity)[0]
+        heads, red = segment_totals(keys, valid, leaves[0], op=op,
+                                    identity=ident, block=block,
+                                    interpret=interpret)
+        value = jax.tree_util.tree_unflatten(treedef, [red])
+        return {"key": data["key"], "value": value}, heads
+
+    return post
+
+
+def make_bucket_route(p: int, C: int, block: int, interpret: bool):
+    """Kernel-backed exchange router for ``_pack_exchange`` (module-level
+    so plan-cache keys stay stable across rebuilds)."""
+    from repro.kernels.moe_route.ops import bucket_route
+
+    def route(dest):
+        return bucket_route(dest, p, C, block=block, interpret=interpret)
+
+    return route
 
 
 def make_group_post(G: int):

@@ -32,16 +32,19 @@ checks, capacity-memory hits, wide-plan compiles, bytes moved) — surfaced via
 from __future__ import annotations
 
 import threading
+import time
 import types
 from collections import OrderedDict
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import comm, faults
 from repro.core import shuffle as sh
 from repro.core.partition import Block, block_aval as _block_aval, block_devices, place_block
+from repro.kernels.registry import KernelRegistry, builtin_reduce_op
 
 
 class _Opaque(Exception):
@@ -148,7 +151,7 @@ class ShuffleManager:
 
     def __init__(self, ctx, *, worker=None, capacity_factor: float = 2.0,
                  join_max_matches: int = 8, plan_cache_size: int = 64,
-                 headroom: float = 1.25):
+                 headroom: float = 1.25, kernels: Optional[KernelRegistry] = None):
         # with a worker, the manager follows the worker's CURRENT context —
         # a gang-scheduled task (core/job.py) swaps in a group communicator
         # and every wide stage runs on the group's sub-mesh and axis
@@ -158,8 +161,13 @@ class ShuffleManager:
         self.join_max_matches = int(join_max_matches)
         self.plan_cache_size = int(plan_cache_size)
         self.headroom = float(headroom)
+        # kernel tier (docs/kernels.md): capability/selection + autotune
+        # memo, consulted once per kernel-eligible wide node
+        self.kernels = kernels if kernels is not None else KernelRegistry()
         self._capacity: "OrderedDict[tuple, float]" = OrderedDict()
         self._fanout: "OrderedDict[tuple, int]" = OrderedDict()
+        self._kernel_notes: "OrderedDict[object, str]" = OrderedDict()
+        self._op_memo: "OrderedDict[tuple, Optional[str]]" = OrderedDict()
         self._plans: "OrderedDict[tuple, Callable]" = OrderedDict()
         # gang-scheduled tasks on disjoint groups share this manager from
         # several threads; LRU get+move / insert+evict, the capacity/fanout
@@ -286,18 +294,118 @@ class ShuffleManager:
         return out
 
     # ------------------------------------------------------------------
+    # kernel tier plumbing (docs/kernels.md): per-node selection + autotune
+    # ------------------------------------------------------------------
+    def _note(self, sig, txt: str):
+        """Record the kernel selection for ``df.explain()`` annotation."""
+        with self._plan_lock:
+            self._kernel_notes[sig] = txt
+            while len(self._kernel_notes) > self.MEMORY_ENTRIES:
+                self._kernel_notes.popitem(last=False)
+
+    def _reduce_op(self, fn, identity, value) -> Optional[str]:
+        """Memoised ``builtin_reduce_op``: jaxpr recognition costs ~0.5 ms
+        per call, which a fresh lineage would otherwise pay on EVERY
+        reduceByKey — keying by the same fn/static tokens the wide-plan
+        cache uses makes repeat consultations a dict hit (and keeps the
+        auto-mode parity floor honest on interpret-only hosts)."""
+        if value is None:
+            return None
+        try:
+            key = (fn_token(fn), _static_token(identity),
+                   tuple((str(getattr(l, "dtype", "?")), np.ndim(l))
+                         for l in jax.tree_util.tree_leaves(value)))
+        except Exception:
+            return builtin_reduce_op(fn, identity, value)
+        with self._plan_lock:
+            if key in self._op_memo:
+                self._op_memo.move_to_end(key)
+                return self._op_memo[key]
+        op = builtin_reduce_op(fn, identity, value)
+        with self._plan_lock:
+            self._op_memo[key] = op
+            while len(self._op_memo) > self.MEMORY_ENTRIES:
+                self._op_memo.popitem(last=False)
+        return op
+
+    def _time_calls(self, fn, *args) -> float:
+        """Median-free micro-timer: one warm-up (compile), two timed runs."""
+        jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        jax.block_until_ready(fn(*args))
+        return time.perf_counter() - t0
+
+    def _block_candidates(self, n: int) -> list:
+        # candidates beyond n rows collapse to one tile — dedupe so small
+        # inputs sweep (and key) only distinct effective block sizes
+        n = max(int(n), 1)
+        return sorted({min(int(c), n) for c in self.kernels.blocks})
+
+    def _tune_reduce(self, b: Block, op: str, sel) -> int:
+        """Tuned block size for the segment kernel on this block's aval."""
+        from repro.kernels.segment_reduce.ops import segment_totals
+
+        leaf = jax.tree_util.tree_leaves(b.data["value"])[0]
+        D = () if leaf.ndim == 1 else leaf.shape[1:]
+        n = b.capacity
+        key = ("segment_reduce", op, str(leaf.dtype), D, n,
+               sel.interpret, jax.default_backend())
+
+        def timer(c: int) -> float:
+            keys = jnp.zeros(n, jnp.int32)
+            valid = jnp.ones(n, bool)
+            vals = jnp.zeros((n, *D), leaf.dtype)
+            f = jax.jit(lambda k, v, x: segment_totals(
+                k, v, x, op=op, identity=0, block=c, interpret=sel.interpret))
+            return self._time_calls(f, keys, valid, vals)
+
+        return self.kernels.tune(key, self._block_candidates(n), timer)
+
+    def _tune_route(self, n_local: int, sel) -> int:
+        """Tuned block size for the bucket router at this exchange width."""
+        p = self.p
+        n = max(int(n_local), 1)
+        key = ("bucket_route", p, n, sel.interpret, jax.default_backend())
+
+        def timer(c: int) -> float:
+            route = sh.make_bucket_route(p, max(n // p, 1), c, sel.interpret)
+            f = jax.jit(route)
+            return self._time_calls(f, jnp.zeros(n, jnp.int32))
+
+        return self.kernels.tune(key, self._block_candidates(n), timer)
+
+    def _select_route(self, sig, n_local: int):
+        """Kernel-or-fallback decision for a hash-routed exchange: returns
+        (selection, tuned_block), (None, None) for the argsort path."""
+        if self.p <= 1:  # no exchange, nothing to route
+            return None, None
+        sel = self.kernels.select("bucket_route")
+        if sel is None:
+            return None, None
+        try:
+            blk = self._tune_route(n_local, sel)
+        except Exception:
+            self.kernels.demote()
+            return None, None
+        self._note(sig, f"{sel.describe()} block={blk}")
+        return sel, blk
+
+    # ------------------------------------------------------------------
     # sort-routed wide ops (sort / distinct / reduceByKey / groupByKey)
     # ------------------------------------------------------------------
-    def _sorted(self, sig, b: Block, key_fn, ascending: bool, post, kind: tuple) -> Block:
+    def _sorted(self, sig, b: Block, key_fn, ascending: bool, post, kind: tuple,
+                kernel: Optional[str] = None) -> Block:
         b = self._placed(b)
         rows = b.capacity
         n_local = rows // max(self.p, 1)
         data, valid = self._adaptive(
             sig, rows, n_local,
-            lambda C: self._run_sort_stage(kind, C, b, key_fn, ascending, post))
+            lambda C: self._run_sort_stage(kind, C, b, key_fn, ascending, post,
+                                           kernel=kernel))
         return Block(data, valid)
 
-    def _run_sort_stage(self, kind, C, b, key_fn, ascending, post):
+    def _run_sort_stage(self, kind, C, b, key_fn, ascending, post, kernel=None):
         ctx = self.ctx
         # the mesh is part of the key: a stage traced for a p=4 group closes
         # over that group's communicator and must never serve the world (or
@@ -316,6 +424,8 @@ class ShuffleManager:
         fn = self._plan(key, builder)
         self._account(b, C)
         faults.check("shuffle.stage", kind=kind[0], p=self.p)
+        if kernel is not None:
+            faults.check("kernel.stage", kind=kind[0], kernel=kernel, p=self.p)
         return fn(b.data, b.valid)
 
     def sort(self, sig, b: Block, key_fn, ascending: bool = True) -> Block:
@@ -325,6 +435,29 @@ class ShuffleManager:
         return self._sorted(sig, b, key_fn, True, sh.heads_post, ("distinct",))
 
     def reduce_by_key(self, sig, b: Block, fn, identity) -> Block:
+        # kernel tier: a builtin sum/max/min over a single supported leaf
+        # runs on the Pallas segment kernel; everything else (arbitrary
+        # fns, pytree values, unsupported dtypes) keeps the jnp oracle
+        value = b.data.get("value") if isinstance(b.data, dict) else None
+        op = self._reduce_op(fn, identity, value)
+        sel = self.kernels.select("segment_reduce") if op is not None else None
+        if sel is not None:
+            try:
+                blk = self._tune_reduce(b, op, sel)
+            except Exception:
+                self.kernels.demote()
+                sel = None
+        if sel is not None:
+            self._note(sig, f"{sel.describe()} op={op} block={blk}")
+            post = sh.make_reduce_post_kernel(op, identity, block=blk,
+                                              interpret=sel.interpret)
+            # the tuned block is part of the wide-plan key: a re-tune (memo
+            # eviction) that lands on a different block recompiles, a memo
+            # hit re-uses the compiled stage — zero recompiles on repeats
+            kind = ("reduceByKey", "kernel", op, blk, sel.interpret,
+                    _static_token(identity))
+            return self._sorted(sig, b, lambda r: r["key"], True, post, kind,
+                                kernel="segment_reduce")
         vfn = lambda a, c: jax.tree.map(lambda x, y: fn(x, y), a, c)  # noqa: E731
         post = sh.make_reduce_post(vfn, identity)
         kind = ("reduceByKey", fn_token(fn), _static_token(identity))
@@ -342,24 +475,34 @@ class ShuffleManager:
         b = self._placed(b)
         rows = b.capacity
         n_local = rows // max(self.p, 1)
+        sel, blk = self._select_route(sig, n_local)
         data, valid = self._adaptive(
-            sig, rows, n_local, lambda C: self._run_hash_stage(C, b, key_fn))
+            sig, rows, n_local,
+            lambda C: self._run_hash_stage(C, b, key_fn, sel=sel, blk=blk))
         return Block(data, valid)
 
-    def _run_hash_stage(self, C, b, key_fn):
+    def _run_hash_stage(self, C, b, key_fn, sel=None, blk=None):
         ctx = self.ctx
-        key = (("partitionBy",), C, fn_token(key_fn), _block_aval(b), ctx.mesh)
+        route = None
+        ktag = ()
+        if sel is not None:
+            route = sh.make_bucket_route(self.p, C, blk, sel.interpret)
+            ktag = ("kernel", blk, sel.interpret)
+        key = (("partitionBy",) + ktag, C, fn_token(key_fn), _block_aval(b), ctx.mesh)
 
         def builder():
             def run(data, valid):
                 keys = jax.vmap(key_fn)(data)
-                return sh.hash_stage(ctx, keys, valid, data, C)
+                return sh.hash_stage(ctx, keys, valid, data, C, route=route)
 
             return run
 
         fn = self._plan(key, builder)
         self._account(b, C)
         faults.check("shuffle.stage", kind="partitionBy", p=self.p)
+        if sel is not None:
+            faults.check("kernel.stage", kind="partitionBy",
+                         kernel="bucket_route", p=self.p)
         return fn(b.data, b.valid)
 
     # ------------------------------------------------------------------
@@ -373,18 +516,27 @@ class ShuffleManager:
         factor = self._factor(sig, (nl, nr))
         with self._plan_lock:
             M = self._fanout.get((sig, nl, nr, p), max_matches)
+        sel, blk = self._select_route(sig, max(nl_local, nr_local))
         ctx = self.ctx
         attempts = 0
         while True:
             attempts += 1
             Cl = sh.capacity_for(factor, nl_local, p)
             Cr = sh.capacity_for(factor, nr_local, p)
-            key = (("join", M), Cl, Cr, _block_aval(lb), _block_aval(rb), ctx.mesh)
+            route_l = route_r = None
+            ktag = ()
+            if sel is not None:
+                route_l = sh.make_bucket_route(p, Cl, blk, sel.interpret)
+                route_r = sh.make_bucket_route(p, Cr, blk, sel.interpret)
+                ktag = ("kernel", blk, sel.interpret)
+            key = (("join", M) + ktag, Cl, Cr, _block_aval(lb), _block_aval(rb),
+                   ctx.mesh)
 
-            def builder(Cl=Cl, Cr=Cr, M=M):
+            def builder(Cl=Cl, Cr=Cr, M=M, route_l=route_l, route_r=route_r):
                 def run(ld, lv, rd, rv):
                     return sh.join_stage(ctx, ld["key"], lv, ld["value"],
-                                         rd["key"], rv, rd["value"], Cl, Cr, M)
+                                         rd["key"], rv, rd["value"], Cl, Cr, M,
+                                         route_l=route_l, route_r=route_r)
 
                 return run
 
@@ -393,6 +545,9 @@ class ShuffleManager:
                 self._account(lb, Cl)
                 self._account(rb, Cr)
             faults.check("shuffle.stage", kind="join", p=p, attempt=attempts - 1)
+            if sel is not None:
+                faults.check("kernel.stage", kind="join", kernel="bucket_route",
+                             p=p, attempt=attempts - 1)
             rows, ok, eovf, lfill, rfill, fovf = fn(lb.data, lb.valid, rb.data, rb.valid)
             # one deferred check covers both exchanges AND the fan-out bound
             self._bump("overflow_checks")
@@ -424,14 +579,17 @@ class ShuffleManager:
     # observability
     # ------------------------------------------------------------------
     def annotate(self, node) -> str:
-        """Per-node suffix for DagEngine.explain — shuffle capacity state."""
+        """Per-node suffix for DagEngine.explain — shuffle capacity state
+        plus the kernel-tier selection (docs/kernels.md)."""
         sig = getattr(node, "shuffle_sig", None)
         if sig is None:
             return ""
+        knote = self._kernel_notes.get(sig)
+        kernel = f" kernel={knote}" if knote else ""
         factors = [f for (s, _rows, _p), f in self._capacity.items() if s == sig]
         if factors:
-            return f" {{shuffle: capacity_factor={factors[-1]:.2f} (memory)}}"
-        return f" {{shuffle: capacity_factor={self.default_factor:.2f} (cold)}}"
+            return f" {{shuffle: capacity_factor={factors[-1]:.2f} (memory){kernel}}}"
+        return f" {{shuffle: capacity_factor={self.default_factor:.2f} (cold){kernel}}}"
 
     def summary(self) -> str:
         s = self.stats
@@ -443,5 +601,6 @@ class ShuffleManager:
             f"misses={s['capacity_memory_misses']} entries={len(self._capacity)}\n"
             f"wide plans: compiled={s['wide_plan_misses']} hits={s['wide_plan_hits']} "
             f"evictions={s['wide_plan_evictions']} bytes_moved={s['bytes_moved']} "
-            f"group_reshards={s['group_reshards']}"
+            f"group_reshards={s['group_reshards']}\n"
+            f"kernels: {self.kernels.describe()}"
         )

@@ -7,9 +7,15 @@ ops.py (jit'd public wrapper, CPU auto-interpret), ref.py (pure-jnp oracle).
                     kills the O(S²) HBM scores traffic the §Roofline table
                     shows dominating the jnp baseline
   ssd_scan        — Mamba-2 SSD chunk scan (intra-chunk attention-like +
-                    carried inter-chunk state)
+                    carried inter-chunk state); also hosts prefix_scan, the
+                    same carry pattern backing the shuffle prefix pass
   segment_reduce  — sorted segmented reduction (reduceByKey/groupBy hot path
                     of the dataflow layer — the paper's TeraSort/K-Means side)
+                    + segment_totals, the shuffle-stage ABI entry
   moe_route       — fused softmax + top-k + capacity positions for MoE
-                    dispatch (phi3.5 / mixtral / jamba)
+                    dispatch (phi3.5 / mixtral / jamba) + bucket_route, the
+                    same ordinal technique routing shuffle exchanges
+
+registry.py is the capability/selection/autotune layer the shuffle engine
+(core/shuffle_plan.py) consults per wide node — docs/kernels.md.
 """

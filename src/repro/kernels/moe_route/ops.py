@@ -11,6 +11,30 @@ def _should_interpret():
     return jax.default_backend() != "tpu"
 
 
+def bucket_route(dest, p: int, capacity: int, block: int = 512, interpret=None):
+    """Shuffle-exchange routing (route.py): capacity ordinals in row order.
+
+    dest: (N,) int32 in [0, p). Returns (pos (N,) i32, keep (N,) bool,
+    counts (p,) i32) — bit-identical to the stable-argsort formulation in
+    core/shuffle._pack_exchange (and to ``bucket_route_ref``)."""
+    from repro.kernels.moe_route.route import bucket_route_fwd
+
+    interpret = _should_interpret() if interpret is None else interpret
+    (N,) = dest.shape
+    if N == 0:
+        return (jnp.zeros(0, jnp.int32), jnp.zeros(0, bool),
+                jnp.zeros(p, jnp.int32))
+    d = dest.astype(jnp.int32)
+    pad = (-N) % block if N > block else 0
+    if pad:
+        # the sentinel p one-hots to an all-zero row: padding neither
+        # claims ordinals nor inflates counts
+        d = jnp.concatenate([d, jnp.full((pad,), p, jnp.int32)])
+    pos, keep, counts = bucket_route_fwd(d, p=p, capacity=capacity,
+                                         block=block, interpret=interpret)
+    return pos[:N], keep[:N], counts
+
+
 def moe_route(logits, k: int, capacity: int, block_t: int = 256, interpret=None):
     interpret = _should_interpret() if interpret is None else interpret
     T = logits.shape[0]

@@ -1,0 +1,76 @@
+"""Shuffle bucket routing — Pallas TPU kernel (docs/kernels.md).
+
+The MoE router's capacity-ordinal technique (moe_route.py) applied to the
+shuffle engine's exchange: rows are "tokens", destination executors are
+"experts", bucket capacity C is the expert capacity. Grid (n_blocks,)
+sequential over row tiles; a VMEM (1, p) scratch carries per-destination
+running counts, so ordinals are globally consistent in row order without
+an argsort. Per tile: one-hot cumsum for in-tile ordinals, a carried-count
+gather for the base.
+
+Ordinals are exact integers — for row r with destination b, ``pos`` is the
+number of earlier rows routed to b, which is precisely the rank a stable
+argsort-by-destination assigns (core/shuffle._pack_exchange). That makes
+the kernel-routed packed buffer bit-identical to the argsort path: kept
+rows land in the same unique slots; only the sliced-off overflow scratch
+slot can differ.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(d_ref, pos_ref, keep_ref, cnt_ref, counts, *, bt, p, capacity, n_blocks):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        counts[...] = jnp.zeros_like(counts)
+
+    d = d_ref[...]  # (bt,) int32 in [0, p); == p marks padding rows
+    oh = jax.nn.one_hot(d, p, dtype=jnp.int32)  # (bt, p); pad rows → all-zero
+    csum = jnp.cumsum(oh, axis=0)
+    local = ((csum - oh) * oh).sum(-1)  # exclusive in-tile ordinal
+    base = (oh * counts[...]).sum(-1)  # carried counts gathered per row
+    pos = base + local
+    pos_ref[...] = pos
+    keep_ref[...] = (pos < capacity) & (d < p)
+    counts[...] = counts[...] + csum[-1:]
+
+    @pl.when(t == n_blocks - 1)
+    def _fin():
+        cnt_ref[...] = counts[0]
+
+
+def bucket_route_fwd(dest, p: int, capacity: int, block: int = 512,
+                     interpret: bool = False):
+    """dest: (N,) int32 in [0, p] (p = padding sentinel), N % block == 0
+    (the ops wrapper pads). Returns (pos (N,) i32, keep (N,) bool,
+    counts (p,) i32 — final per-destination demand)."""
+    (N,) = dest.shape
+    bt = min(block, N)
+    n_blocks = N // bt
+    kern = functools.partial(_kernel, bt=bt, p=p, capacity=capacity,
+                             n_blocks=n_blocks)
+    return pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((bt,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.bool_),
+            jax.ShapeDtypeStruct((p,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, p), jnp.int32)],
+        interpret=interpret,
+    )(dest)

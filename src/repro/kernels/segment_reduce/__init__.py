@@ -1,2 +1,2 @@
-from repro.kernels.segment_reduce.ops import segment_reduce  # noqa: F401
+from repro.kernels.segment_reduce.ops import segment_reduce, segment_totals  # noqa: F401
 from repro.kernels.segment_reduce.ref import segment_reduce_ref  # noqa: F401

@@ -5,6 +5,11 @@ segment value across tiles. In-tile segmented inclusive scan is a
 Hillis–Steele log-depth sweep (static python loop of shifted selects —
 VPU-friendly, no HBM intermediates). Backs reduceByKey/groupBy of the
 dataflow layer (paper's TeraSort/K-Means path).
+
+Compute dtype follows the input (f32 floats, i32 ints — the ops wrapper
+normalizes): integer reductions are associative-exact, which is what lets
+the shuffle engine's differential gate demand bit-identity with the jnp
+oracle on the counting hot path (docs/kernels.md).
 """
 from __future__ import annotations
 
@@ -15,22 +20,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-_FNS = {
-    "sum": (jnp.add, 0.0),
-    "max": (jnp.maximum, -1e30),
-    "min": (jnp.minimum, 1e30),
-}
+from repro.kernels.ssd_scan.prefix import op_identity
+
+_FNS = {"sum": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
 
 
-def _kernel(v_ref, h_ref, o_ref, carry, *, bq, n_blocks, op):
-    fn, ident = _FNS[op]
+def _kernel(v_ref, h_ref, o_ref, carry, *, bq, n_blocks, op, ident):
+    fn = _FNS[op]
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         carry[...] = jnp.full_like(carry, ident)
 
-    v = v_ref[...].astype(jnp.float32)  # (bq, D)
+    v = v_ref[...]  # (bq, D)
     hb = h_ref[...]  # (bq,) bool: segment boundary (head-or-invalid)
 
     # Hillis–Steele segmented inclusive scan
@@ -46,19 +49,20 @@ def _kernel(v_ref, h_ref, o_ref, carry, *, bq, n_blocks, op):
     # inject carry into the prefix that continues the previous tile's segment
     seen = jnp.cumsum(hb.astype(jnp.int32)) > 0
     v = jnp.where(seen[:, None], v, fn(v, carry[...]))
-    o_ref[...] = v.astype(o_ref.dtype)
+    o_ref[...] = v
     carry[...] = v[-1:]
 
 
 def segment_reduce_fwd(values, boundaries, op: str = "sum", block: int = 256,
                        interpret: bool = False):
-    """values: (N, D) pre-masked to identity on invalid rows; boundaries:
-    (N,) bool = head-or-invalid flags. N % block == 0 (ops.py pads).
-    Returns inclusive segmented scan (N, D) in f32."""
+    """values: (N, D) pre-masked on invalid rows; boundaries: (N,) bool =
+    head-or-invalid flags. N % block == 0 (ops.py pads with the op
+    identity). Returns the inclusive segmented scan (N, D), values.dtype."""
     N, D = values.shape
     bq = min(block, N)
     n_blocks = N // bq
-    kern = functools.partial(_kernel, bq=bq, n_blocks=n_blocks, op=op)
+    ident = op_identity(op, values.dtype)
+    kern = functools.partial(_kernel, bq=bq, n_blocks=n_blocks, op=op, ident=ident)
     return pl.pallas_call(
         kern,
         grid=(n_blocks,),
@@ -67,7 +71,7 @@ def segment_reduce_fwd(values, boundaries, op: str = "sum", block: int = 256,
             pl.BlockSpec((bq,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((bq, D), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((N, D), values.dtype),
+        scratch_shapes=[pltpu.VMEM((1, D), values.dtype)],
         interpret=interpret,
     )(values, boundaries)

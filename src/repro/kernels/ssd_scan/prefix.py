@@ -1,0 +1,70 @@
+"""Unsegmented prefix scan (cumsum/cummin/cummax) — Pallas TPU kernel.
+
+The SSD chunk scan's inter-chunk recurrence pattern applied to the shuffle
+engine's prefix pass: grid (n_blocks,) sequential over row tiles, a VMEM
+scalar scratch carries the running reduction across tiles (exactly how
+ssd_scan.py carries its (P, N) state), and the in-tile inclusive scan is a
+Hillis–Steele log-depth sweep. Backs ``segment_totals``' last-row gather
+(core/shuffle.segmented_reduce's ``suff_min`` pass) — docs/kernels.md.
+
+Integer min/max/sum are associative-exact, so any association order —
+this kernel's, or lax.cummin's — produces bit-identical results; that is
+the property the wide-stage differential tests pin.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_FNS = {"sum": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
+
+
+def op_identity(op: str, dtype):
+    """True identity of ``op`` on ``dtype`` (python scalar, static)."""
+    if op == "sum":
+        return 0
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return float("-inf") if op == "max" else float("inf")
+    info = jnp.iinfo(jnp.dtype(dtype))
+    return info.min if op == "max" else info.max
+
+
+def _kernel(x_ref, o_ref, carry, *, bq, op, ident):
+    fn = _FNS[op]
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry[...] = jnp.full_like(carry, ident)
+
+    v = x_ref[...]  # (bq,)
+    off = 1
+    while off < bq:  # Hillis–Steele inclusive scan, log-depth
+        v = fn(v, jnp.concatenate([jnp.full((off,), ident, v.dtype), v[:-off]]))
+        off *= 2
+    v = fn(v, carry[0])  # fold in the reduction of all previous tiles
+    o_ref[...] = v
+    carry[...] = v[-1:]
+
+
+def prefix_scan_fwd(x, op: str = "sum", block: int = 512, interpret: bool = False):
+    """x: (N,), N % block == 0 (the ops wrapper pads with the op identity).
+    Returns the inclusive scan (N,), same dtype."""
+    (N,) = x.shape
+    bq = min(block, N)
+    n_blocks = N // bq
+    ident = op_identity(op, x.dtype)
+    kern = functools.partial(_kernel, bq=bq, op=op, ident=ident)
+    return pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((bq,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1,), x.dtype)],
+        interpret=interpret,
+    )(x)

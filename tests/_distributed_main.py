@@ -354,6 +354,40 @@ def main():
     y_ref, _ = moe_ffn_bsd(xin, pmoe, cfg)
     check("moe_ep_parity", float(jnp.abs(y_ep - y_ref).max()) < 1e-4)
 
+    # ---- kernel tier at p=8 (docs/kernels.md): interpret vs off must be
+    # bit-identical with identical retry trajectories, with the kernels
+    # actually engaged on the exchange paths (segment_reduce post on
+    # reduceByKey, bucket_route on partitionBy/join)
+    res8, ctr8 = {}, {}
+    for mode in ("interpret", "off"):
+        wk = IWorker(ICluster(IProperties({
+            "ignis.executor.instances": "8", "ignis.kernels": mode})),
+            "python")
+        kvk = wk.parallelize(vals).map(
+            lambda x: {"key": x % 13, "value": jnp.int32(1)})
+        rbk = sorted((int(np.asarray(r["key"])), int(np.asarray(r["value"])))
+                     for r in kvk.reduce_by_key(lambda a, b: a + b, 0).collect())
+        pbk = sorted(int(np.asarray(r["value"]))
+                     for r in wk.parallelize(vals[:512]).map(
+                         lambda x: {"key": x % 5, "value": x})
+                     .partition_by().collect())
+        lk = wk.parallelize(np.arange(64, dtype=np.int32)).map(
+            lambda x: {"key": x % 8, "value": x})
+        rk = wk.parallelize(np.arange(32, dtype=np.int32)).map(
+            lambda x: {"key": x % 8, "value": x * 2})
+        jk = sorted((int(np.asarray(x["key"])), int(np.asarray(x["value"][0])),
+                     int(np.asarray(x["value"][1])))
+                    for x in lk.join(rk).collect())
+        res8[mode] = (rbk, pbk, jk)
+        sk = wk.shuffle_stats()
+        ctr8[mode] = (sk["overflow_retries"], sk["fanout_retries"])
+        if mode == "interpret":
+            check("p8_kernel_hits", sk["kernel_hits"] >= 3)
+        else:
+            check("p8_kernel_off_no_hits", sk["kernel_hits"] == 0)
+    check("p8_kernel_on_off_equal", res8["interpret"] == res8["off"])
+    check("p8_kernel_retry_counters_equal", ctr8["interpret"] == ctr8["off"])
+
     print("ALL_DISTRIBUTED_OK")
 
 

@@ -286,6 +286,31 @@ def main():
              FaultPlan().kill_handle(coll="allreduce", phase="flush",
                                      attempt=0))
 
+    # ---- kernel tier chaos over the real mesh (docs/kernels.md) -----------
+    wk = IWorker(ICluster(IProperties({
+        "ignis.executor.instances": "8", "ignis.kernels": "interpret"})),
+        "python")
+
+    def kernel_build():
+        return (wk.parallelize(np.arange(128, dtype=np.int32))
+                .map(lambda x: {"key": x % 7, "value": x})
+                .reduce_by_key(lambda a, b: a + b, 0))
+
+    recovers("p8_kernel_stage_kill", kernel_build,
+             lambda df: sorted(map(repr, df.collect())),
+             FaultPlan().fail_kernel_stage("reduceByKey"))
+    check("p8_kernel_stage_was_kernel_backed",
+          wk.shuffle_stats()["kernel_hits"] >= 1)
+
+    f0k = wk.shuffle_stats()["kernel_fallbacks"]
+    r0k = retries()
+    with faults.inject(FaultPlan().fail_kernel_capability()):
+        rows_k = sorted(map(repr, kernel_build().collect()))
+    check("p8_kernel_capability_degrades",
+          rows_k == sorted(map(repr, kernel_build().collect()))
+          and wk.shuffle_stats()["kernel_fallbacks"] > f0k
+          and retries() == r0k)
+
     print("ALL_FAULTS_OK")
 
 

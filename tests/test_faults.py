@@ -583,6 +583,69 @@ def test_kill_handle_budget_exhaustion_surfaces(worker):
 
 
 # ---------------------------------------------------------------------------
+# kernel tier chaos (docs/kernels.md): kernel.stage is a task fault the
+# scheduler retries via lineage; kernel.capability only degrades the node
+# ---------------------------------------------------------------------------
+
+
+def _kernel_worker(mode="interpret"):
+    return IWorker(ICluster(IProperties({"ignis.kernels": mode})), "python")
+
+
+def _rbk_build(w):
+    def build():
+        return (w.parallelize(_ints(64))
+                .map(lambda x: {"key": x % 5, "value": x})
+                .reduce_by_key(lambda a, b: a + b, 0))
+
+    return build
+
+
+def test_kernel_stage_kill_retries_via_lineage():
+    """A kill INSIDE a kernel-backed wide stage is a task fault: lineage
+    retry must converge to the oracle with exactly one retry."""
+    w = _kernel_worker()
+    _assert_recovers(_rbk_build(w), lambda df: sorted(map(repr, df.collect())),
+                     FaultPlan().fail_kernel_stage("reduceByKey"))
+    assert w.shuffle_stats()["kernel_hits"] >= 1
+
+
+def test_kernel_stage_site_never_fires_on_fallback_tier():
+    """With the kernel tier off the stage runs the jnp oracle, so the
+    kernel.stage site must not exist on the path — the plan stays silent."""
+    w = _kernel_worker("off")
+    plan = FaultPlan().fail_kernel_stage()
+    with faults.inject(plan):
+        assert len(_rbk_build(w)().collect()) == 5
+    assert plan.injections() == 0
+
+
+def test_kernel_capability_fault_degrades_mid_job_without_error():
+    """Capability loss mid-job is NOT a task fault: the node silently runs
+    the plain-JAX fallback, results match, no scheduler retries."""
+    w = _kernel_worker()
+    build = _rbk_build(w)
+    oracle = sorted(map(repr, build().collect()))
+    f0 = w.shuffle_stats()["kernel_fallbacks"]
+    r0 = _retries()
+    plan = FaultPlan().fail_kernel_capability()  # unbounded: every check
+    with faults.inject(plan):
+        assert sorted(map(repr, build().collect())) == oracle
+    assert plan.injections() >= 1
+    assert _retries() == r0
+    assert w.shuffle_stats()["kernel_fallbacks"] > f0
+
+
+def test_kernel_stage_budget_exhaustion_surfaces():
+    w = _kernel_worker()
+    plan = FaultPlan().fail("kernel.stage", kind="reduceByKey",
+                            attempt=None)  # unbounded: exhaust the budget
+    with faults.inject(plan):
+        with pytest.raises(FaultInjected):
+            _rbk_build(w)().collect()
+
+
+# ---------------------------------------------------------------------------
 # the p=8 chaos matrix (subprocess: the 8-device flag must not leak here)
 # ---------------------------------------------------------------------------
 

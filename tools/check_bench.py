@@ -53,8 +53,10 @@ import re
 import sys
 from pathlib import Path
 
-# counters whose increase is a regression on any machine
-_GATED_COUNTERS = ("retries", "recompiles")
+# counters whose increase is a regression on any machine; matched by exact
+# name OR suffix (``kernel_recompiles`` gates like ``recompiles`` —
+# bench_kernels' repeat-warm row)
+_GATED_COUNTERS = ("retries", "recompiles", "retunes")
 _KV = re.compile(r"\b([A-Za-z_][A-Za-z0-9_]*)=([0-9.]+)(x?)\b")
 
 
@@ -93,12 +95,12 @@ def check(current: dict, baseline: dict, tolerance: float) -> list[str]:
             errors.append(f"{name}: present in baseline but missing from this run")
             continue
         bf, cf = derived_fields(base), derived_fields(cur)
-        for counter in _GATED_COUNTERS:
-            if counter in bf and counter in cf:
-                if cf[counter][0] > bf[counter][0]:
-                    errors.append(
-                        f"{name}: {counter} increased "
-                        f"{bf[counter][0]:g} -> {cf[counter][0]:g}")
+        for k in cf:
+            gated = any(k == c or k.endswith("_" + c) for c in _GATED_COUNTERS)
+            if gated and k in bf and cf[k][0] > bf[k][0]:
+                errors.append(
+                    f"{name}: {k} increased "
+                    f"{bf[k][0]:g} -> {cf[k][0]:g}")
 
     # derived-factor floors are self-describing (checked on current rows
     # only — a new bench gets its floor enforced before it has a baseline),
