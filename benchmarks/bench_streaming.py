@@ -1,0 +1,209 @@
+"""Streaming micro-batch ingestion under multi-tenant serving load
+(docs/streaming.md, DESIGN.md §12).
+
+Four simulated tenants, ≥1000 micro-batch jobs per timed arm (default
+4 × 250), each batch a replayable ``TenantRequestSource`` slice folded
+through a deterministic batch function:
+
+  * **single** (the baseline): tenants run ONE AT A TIME — each stream
+    pumps to exhaustion on the full mesh before the next starts. This is
+    the "dedicated cluster per tenant" deployment the paper's unified
+    runtime replaces: no sharing, no interference, total wall = sum of
+    streams.
+  * **multi**: all four pumps run CONCURRENTLY through one
+    ``TenantFrontEnd`` — per-tenant gang groups (``worker.groups(4)``),
+    one shared ``IJob``/scheduler/admission controller. Batch compute
+    overlaps across tenants; the admission bound keeps per-tenant p99
+    from collapsing.
+
+Headline factors (interleaved per-iteration ratios, median — same
+discipline as bench_groups; machine-load drift between separate timing
+blocks skews a ratio of medians):
+
+  * ``multi_vs_single``: throughput — gang-grouped multi-tenancy must beat
+    (or on small hosts, match) the sequential baseline. MACHINE-AWARE
+    target: 1.15 on ≥4-core hosts (batch compute genuinely overlaps),
+    0.95 on 2-3 cores, 0.75 on single-core hosts — there, with zero
+    spare cores, four time-sliced pumps cannot beat one and the row only
+    bounds the cost of sharing (observed ~0.86x).
+  * ``p99_headroom``: bounded interference — the multi-tenant per-batch
+    p99 may not exceed ``allowed×`` the single-tenant p99 (allowed is
+    8 on ≥4 cores, 16 below: admission keeps queues bounded, but small
+    hosts serialize harder). Emitted as ``allowed·p99_single/p99_multi``
+    so the floor is the fixed ``target=1.0``.
+
+Counter gates (machine-independent, zero tolerance via check_bench.py):
+the clean arms must run with ``batches_replayed=0 shed=0`` — a replay or a
+shed on the fault-free path is a scheduler/admission regression regardless
+of hardware. The recovery row then kills one micro-batch mid-stream and
+must report EXACTLY ``faulted_batches_replayed=1`` with bit-identical
+folded state (the exactly-once claim, perf-gated).
+
+Needs 8 devices → re-executes itself in a subprocess with
+``--xla_force_host_platform_device_count=8`` (flag must not leak).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def _child(tenants: int, batches: int, rows_per_batch: int, iters: int) -> list:
+    import numpy as np
+
+    from benchmarks.common import row
+    from repro.core import ICluster, IProperties, IWorker, faults
+    from repro.core.faults import FaultPlan
+    from repro.streaming import (
+        StreamContext, StreamTelemetry, TenantFrontEnd, TenantRequestSource)
+
+    limit = batches * rows_per_batch
+    props = {
+        "ignis.executor.instances": "8",
+        "ignis.stream.batch.rows": str(rows_per_batch),
+        # let all four quotas be in flight at once — the global bound must
+        # not serialize tenants the groups were meant to isolate
+        "ignis.stream.max.inflight": str(4 * tenants),
+    }
+    w = IWorker(ICluster(IProperties(props)), "python")
+
+    def batch_fn(rows):
+        # deterministic, GIL-releasing compute: the folded state stays
+        # exactly reproducible (bit-identical under replay) while the sin
+        # reduction gives the scheduler real work to overlap across groups
+        base = np.sum(rows.astype(np.int64), axis=0)
+        x = np.sin(np.arange(200_000, dtype=np.float64)
+                   * (1.0 + float(base[1] % 97) * 1e-3))
+        return np.concatenate([base.astype(np.float64), [float(x.sum())]])
+
+    def zeros():
+        return np.zeros((3,), np.float64)
+
+    def src(i):
+        return TenantRequestSource(i, seed=17, limit=limit)
+
+    def run_single():
+        tel = StreamTelemetry()
+        states = {}
+        for i in range(tenants):
+            sc = StreamContext(w, src(i), tenant=f"t{i}", batch_fn=batch_fn,
+                               init_state=zeros(), telemetry=tel)
+            states[f"t{i}"] = sc.run()
+            sc.job.release()
+        return states, tel
+
+    def run_multi():
+        fe = TenantFrontEnd(w, n_groups=tenants)
+        for i in range(tenants):
+            fe.admit(f"t{i}", src(i), batch_fn=batch_fn, init_state=zeros())
+        states = fe.run()
+        fe.job.release()
+        return states, fe.telemetry, fe
+
+    def p99(tel):
+        snap = tel.snapshot()
+        return max(t["latency_p99_ms"] for t in snap["tenants"].values())
+
+    def totals(tel):
+        snap = tel.snapshot()
+        return snap["batches_replayed"], snap["shed"], snap["completed"]
+
+    # correctness parity + compile/alloc warm-up for both arms: sequential
+    # and gang-grouped pumps must fold identical per-tenant states
+    s_states, _ = run_single()
+    m_states, m_tel, _fe = run_multi()
+    for t in s_states:
+        assert (s_states[t] == m_states[t]).all(), t
+    rep0, shed0, done0 = totals(m_tel)
+    assert (rep0, shed0) == (0, 0), (rep0, shed0)
+    assert done0 == tenants * batches, done0
+
+    # INTERLEAVED timing (bench_groups discipline): arms alternate within
+    # each iteration, the headline is the median of per-iteration ratios
+    import time as _time
+
+    ts, tm, ratios, p99s_s, p99s_m = [], [], [], [], []
+    for _ in range(iters):
+        t0 = _time.perf_counter()
+        _, tel_s = run_single()
+        t1 = _time.perf_counter()
+        _, tel_m, _ = run_multi()
+        t2 = _time.perf_counter()
+        ts.append(t1 - t0)
+        tm.append(t2 - t1)
+        ratios.append((t1 - t0) / (t2 - t1))
+        p99s_s.append(p99(tel_s))
+        p99s_m.append(p99(tel_m))
+    t_single = sorted(ts)[len(ts) // 2]
+    t_multi = sorted(tm)[len(tm) // 2]
+    speedup = sorted(ratios)[len(ratios) // 2]
+    p99_s = sorted(p99s_s)[len(p99s_s) // 2]
+    p99_m = sorted(p99s_m)[len(p99s_m) // 2]
+
+    cores = os.cpu_count() or 1
+    target = 1.15 if cores >= 4 else (0.95 if cores >= 2 else 0.75)
+    allowed = 8.0 if cores >= 4 else 16.0
+    headroom = allowed * p99_s / max(p99_m, 1e-9)
+    n_jobs = tenants * batches
+
+    # recovery arm: kill one micro-batch mid-stream; lineage replays it and
+    # the folded state stays bit-identical with EXACTLY one counted replay
+    plan = FaultPlan().fail_stream_batch(tenant="t1", batch=batches // 2)
+    t0 = _time.perf_counter()
+    with faults.inject(plan):
+        f_states, f_tel, fe_f = run_multi()
+    t_fault = _time.perf_counter() - t0
+    for t in f_states:
+        assert (f_states[t] == s_states[t]).all(), t
+    f_rep, f_shed, _ = totals(f_tel)
+    assert f_rep == plan.injections("stream.batch") == 1, f_rep
+    assert fe_f.stream("t1").batches_replayed == 1
+
+    return [
+        row("stream_single", t_single,
+            f"tenants={tenants} batches={n_jobs} rows={rows_per_batch} "
+            f"sequential world=8"),
+        row("stream_multi", t_multi,
+            f"groups={tenants} inflight_bound={4 * tenants}"),
+        row("stream_throughput", 0.0,
+            f"multi_vs_single={speedup:.2f}x target={target:g} "
+            f"batches_replayed={rep0} shed={shed0} jobs={n_jobs}"),
+        row("stream_p99", 0.0,
+            f"p99_headroom={headroom:.2f}x target=1.0 allowed={allowed:g} "
+            f"p99_single_ms={p99_s:.2f} p99_multi_ms={p99_m:.2f}"),
+        row("stream_recovery", t_fault,
+            f"faulted_batches_replayed={f_rep} shed={f_shed} bitident=1"),
+    ]
+
+
+def bench(tenants: int = 4, batches: int = 250, rows_per_batch: int = 16,
+          iters: int = 3) -> list:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child", str(tenants),
+         str(batches), str(rows_per_batch), str(iters)],
+        env=env, capture_output=True, text=True, timeout=1800, cwd=root,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_streaming child failed:\n{r.stderr[-2000:]}")
+    rows = [ln[len("ROW "):] for ln in r.stdout.splitlines()
+            if ln.startswith("ROW ")]
+    if not rows:
+        raise RuntimeError(f"bench_streaming child emitted no rows:\n{r.stdout}")
+    return rows
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        tenants, batches, rows_per_batch, iters = (int(x) for x in sys.argv[2:6])
+        for r in _child(tenants, batches, rows_per_batch, iters):
+            print(f"ROW {r}")
+    else:
+        from benchmarks.common import emit
+
+        emit(bench())

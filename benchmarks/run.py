@@ -11,6 +11,7 @@
   §4 (UCC)   bench_collectives blocking vs nonblocking vs persistent plans
   §11 (ours) bench_kernels     Pallas kernel tier vs jnp oracles, wide stages
   §2.2/§5    bench_groups      gang-scheduled jobs on disjoint sub-meshes
+  §12 (ours) bench_streaming   multi-tenant micro-batch pumps vs sequential
   Table 5    bench_sloc        integration SLOC
   (ours)     roofline          §Roofline summary from the dry-run artifacts
 
@@ -41,6 +42,8 @@ SMOKE_KWARGS = {
     "kernels": {"n": 20_000, "iters": 3},
     "groups": {"size": 2048, "cg_iters": 1000, "n": 1 << 10, "iters": 3},
     "recovery": {"n": 20_000, "iters": 3},
+    "streaming": {"tenants": 4, "batches": 24, "rows_per_batch": 16,
+                  "iters": 2},
 }
 
 BENCHES = [
@@ -55,6 +58,7 @@ BENCHES = [
     ("collectives", "benchmarks.bench_collectives"),
     ("kernels", "benchmarks.bench_kernels"),
     ("groups", "benchmarks.bench_groups"),
+    ("streaming", "benchmarks.bench_streaming"),
     ("recovery", "benchmarks.bench_recovery"),
     ("sloc", "benchmarks.bench_sloc"),
     ("roofline", "benchmarks.roofline"),

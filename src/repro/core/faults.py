@@ -41,6 +41,14 @@ Injection sites (threaded through the runtime):
                       end-of-task drain of never-awaited handles): ``coll``
                       (allreduce/gather/alltoall/…), ``phase`` (``wait`` /
                       ``flush``)
+  ``stream.batch``    one micro-batch task of a streaming pump
+                      (``streaming/context.py``, docs/streaming.md):
+                      ``tenant``, ``batch``. A task fault: the scheduler
+                      retries via lineage and the pump counts the replay
+                      (``batches_replayed``) — output stays bit-identical.
+  ``stream.admit``    an admission decision (``streaming/admission.py``):
+                      ``tenant``. NOT a task fault — an injected failure
+                      forces a ``shed`` decision (counted, never retried).
   ==================  =====================================================
 
 Rules match a site plus a subset of the info keys; string values match via
@@ -160,6 +168,23 @@ class FaultPlan:
         """Fail kernel capability checks: the node degrades to the
         plain-JAX fallback (no error, no retry — docs/kernels.md)."""
         return self.fail("kernel.capability", kernel=kernel, attempt=None,
+                         times=times)
+
+    def fail_stream_batch(self, tenant: str = "*", batch=None,
+                          attempt: int = 0,
+                          times: Optional[int] = None) -> "FaultPlan":
+        """Kill a streaming micro-batch task on scheduler attempt k: the
+        scheduler replays it via lineage; the pump's commit stays in order
+        and counts the replay exactly (docs/streaming.md)."""
+        match = {"tenant": tenant}
+        if batch is not None:
+            match["batch"] = batch
+        return self.fail("stream.batch", attempt=attempt, times=times, **match)
+
+    def fail_stream_admit(self, tenant: str = "*", times: int = 1) -> "FaultPlan":
+        """Force the next ``times`` admission decisions for ``tenant`` to
+        shed — overload as a policy outcome, not an error (no retry)."""
+        return self.fail("stream.admit", tenant=tenant, attempt=None,
                          times=times)
 
     def delay_task(self, name: str, seconds: float, attempt: int = 0) -> "FaultPlan":

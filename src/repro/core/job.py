@@ -573,6 +573,9 @@ class IJob:
         self.futures: list[IFuture] = []
         self.memo: dict = {}  # TaskNode -> list[Block], shared across tasks
         self._node_tasks: dict = {}  # TaskNode -> JobTask
+        # streaming telemetry hook (docs/streaming.md): StreamTelemetry
+        # .attach(job) installs a snapshot thunk here; stats() surfaces it
+        self.stream: Optional[Callable[[], dict]] = None
         self._t0 = time.perf_counter()
         with self.scheduler._lock:
             self.scheduler.stats["jobs_submitted"] += 1
@@ -789,6 +792,7 @@ class IJob:
         return {
             "tasks": len(self.tasks),
             "actions": sum(1 for t in self.tasks if t.kind == "action"),
+            "serve": sum(1 for t in self.tasks if t.kind == "serve"),
             "native": sum(1 for t in self.tasks if t.kind == "native"),
             "reshard": sum(1 for t in self.tasks if t.kind == "reshard"),
             "stage": sum(1 for t in self.tasks if t.kind == "stage"),
@@ -805,6 +809,9 @@ class IJob:
             "coll": {**comm.comm_stats(),
                      "awaits": self.scheduler.stats["coll_awaits"],
                      "flushed": self.scheduler.stats["coll_flushed"]},
+            # per-tenant streaming/serving telemetry, when a StreamTelemetry
+            # is attached to this job (docs/streaming.md)
+            **({"stream": self.stream()} if self.stream is not None else {}),
         }
 
     def explain(self) -> str:

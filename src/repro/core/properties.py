@@ -36,6 +36,19 @@ DEFAULTS = {
     "ignis.kernels": "auto",
     "ignis.kernels.blocks": "128,256,512",  # autotune sweep candidates
     "ignis.kernels.tune.cache.size": "512",  # autotune memo LRU entries
+    # streaming / multi-tenant serving (docs/streaming.md): micro-batch
+    # size, admission bounds (global in-flight cap, per-tenant quota,
+    # waiter queue depth), overload policy (block = backpressure, the only
+    # exactly-once-deterministic choice; shed = drop-and-count), commit
+    # interval between offset/state checkpoints (0 = no checkpointing),
+    # and the serve front door's request-queue bound
+    "ignis.stream.batch.rows": "256",
+    "ignis.stream.max.inflight": "8",
+    "ignis.stream.tenant.quota": "4",
+    "ignis.stream.queue.depth": "16",
+    "ignis.stream.shed.policy": "block",
+    "ignis.stream.checkpoint.interval": "0",
+    "ignis.serve.queue.depth": "64",
 }
 
 

@@ -3,12 +3,18 @@
 compute-intensive task (the train step) consumes it over the same fabric.
 
 Byte-level tokenizer (no external vocab), document packing into fixed
-seq_len rows with next-token labels, double-buffered host→device feed.
+seq_len rows with next-token labels and a loss mask (PAD positions carry
+label -1, which the loss layer ignores — layers._ce_block), double-buffered
+host→device feed. Packing and batching surface what they drop
+(``stats=``): the tail tokens past the last full row and the partial batch
+at each epoch end — silent discards would skew any data-accounting done on
+top (docs/streaming.md uses the same accounting discipline for shed
+micro-batches).
 """
 from __future__ import annotations
 
 import threading
-from queue import Queue
+from queue import Empty, Full, Queue
 from typing import Iterator, Optional
 
 import jax
@@ -22,9 +28,14 @@ def byte_tokenize(text: str) -> np.ndarray:
     return np.frombuffer(text.encode("utf-8", errors="replace"), np.uint8).astype(np.int32)
 
 
-def pack_sequences(docs, seq_len: int) -> np.ndarray:
+def pack_sequences(docs, seq_len: int, stats: Optional[dict] = None) -> np.ndarray:
     """Pack tokenized docs (list of int arrays) into (n, seq_len+1) rows
-    (the +1 column yields next-token labels)."""
+    (the +1 column yields next-token labels).
+
+    Tokens past the last full row are DROPPED (fixed-shape rows); pass a
+    ``stats`` dict to receive ``dropped_tail_tokens`` (and ``packed_rows`` /
+    ``stream_tokens`` for the denominator) instead of losing that count.
+    """
     stream: list[int] = []
     for d in docs:
         stream.append(BOS)
@@ -35,20 +46,50 @@ def pack_sequences(docs, seq_len: int) -> np.ndarray:
     arr = np.full((n, L), PAD, np.int32)
     flat = np.asarray(stream[: n * L], np.int32)
     arr.reshape(-1)[: flat.size] = flat
+    if stats is not None:
+        stats["stream_tokens"] = len(stream)
+        stats["packed_rows"] = n
+        stats["dropped_tail_tokens"] = max(len(stream) - n * L, 0)
     return arr
 
 
+def loss_mask_for(labels: np.ndarray) -> np.ndarray:
+    """True where a label is a real next-token target (not PAD filler)."""
+    return labels != PAD
+
+
 def batches_from_rows(rows: np.ndarray, batch: int, *, seed: int = 0,
-                      epochs: Optional[int] = None) -> Iterator[dict]:
-    """Yield {"tokens", "labels"} host batches forever (or for N epochs)."""
+                      epochs: Optional[int] = None,
+                      stats: Optional[dict] = None) -> Iterator[dict]:
+    """Yield ``{"tokens", "labels", "loss_mask"}`` host batches forever (or
+    for N epochs).
+
+    ``loss_mask`` marks real next-token targets; PAD positions are also
+    rewritten to label ``-1`` so the model's cross-entropy (which masks
+    negative labels) never trains on padding. Rows that do not fill a batch
+    at an epoch end are dropped; a ``stats`` dict receives the running
+    ``dropped_partial_rows`` count (and ``epochs_done``) so the discard is
+    visible rather than silent.
+    """
     rng = np.random.default_rng(seed)
     e = 0
+    if stats is not None:
+        stats.setdefault("dropped_partial_rows", 0)
+        stats.setdefault("epochs_done", 0)
     while epochs is None or e < epochs:
         order = rng.permutation(len(rows))
-        for i in range(0, len(order) - batch + 1, batch):
+        n_full = (len(order) // batch) * batch
+        for i in range(0, n_full, batch):
             sel = rows[order[i : i + batch]]
-            yield {"tokens": sel[:, :-1], "labels": sel[:, 1:]}
+            labels = sel[:, 1:]
+            mask = loss_mask_for(labels)
+            yield {"tokens": sel[:, :-1],
+                   "labels": np.where(mask, labels, -1).astype(labels.dtype),
+                   "loss_mask": mask}
         e += 1
+        if stats is not None:
+            stats["dropped_partial_rows"] += len(order) - n_full
+            stats["epochs_done"] = e
 
 
 class TrainPipeline:
@@ -69,12 +110,27 @@ class TrainPipeline:
             return jax.device_put(x, self._sharding)
         return jax.device_put(x)
 
+    def _enqueue(self, item) -> bool:
+        """Bounded put that stays interruptible: a plain ``Queue.put`` on a
+        full queue parks forever, so a consumer that stops iterating (or
+        calls ``close()``) would leak this thread blocked in ``put`` —
+        ``close()`` could then never ``join`` it. Returns False once
+        stopped."""
+        while not self._stop:
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except Full:
+                continue
+        return False
+
     def _run(self):
         for hb in self._it:
             if self._stop:
                 return
-            self._q.put({k: self._put(v) for k, v in hb.items()})
-        self._q.put(None)
+            if not self._enqueue({k: self._put(v) for k, v in hb.items()}):
+                return
+        self._enqueue(None)
 
     def __iter__(self):
         return self
@@ -86,4 +142,14 @@ class TrainPipeline:
         return item
 
     def close(self):
+        """Stop the producer and reclaim its thread. Safe with a FULL queue
+        and a stopped consumer: the stop flag unblocks the producer's
+        bounded put, the drain below frees any slot it may still be
+        spinning on, and the join confirms the thread exited."""
         self._stop = True
+        while True:
+            try:
+                self._q.get_nowait()
+            except Empty:
+                break
+        self._thread.join(timeout=5.0)

@@ -11,6 +11,7 @@ state updates are pure-functional cache swaps.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -40,7 +41,14 @@ class ServeEngine:
         self.cache_len = cache_len
         self.cache = bundle.make_cache(slots, cache_len)
         self.live: list[Optional[Request]] = [None] * slots
-        self.queue: list[Request] = []
+        # deque: admission pops from the head every tick; list.pop(0) is
+        # O(queue) per admit, O(n^2) across a burst of n requests
+        self.queue: deque[Request] = deque()
+        # requests finished but not yet reported: the engine appends here the
+        # moment a request retires (whether at prefill or mid-decode) and
+        # run_to_completion() drains it — callers polling step() directly can
+        # drain it themselves
+        self.retired: list[Request] = []
         self._decode = jax.jit(lambda p, c, t: bundle.decode_step(p, c, t))
         self._last = np.zeros((slots,), np.int32)
 
@@ -48,12 +56,31 @@ class ServeEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _finish_check(self, req: Request, tok: int) -> bool:
+        """Apply the retirement rules to the just-appended token."""
+        if req.eos_id is not None and tok == req.eos_id:
+            req.done = True
+        if len(req.tokens) >= req.max_new_tokens:
+            req.done = True
+            req.truncated = req.eos_id is not None and tok != req.eos_id
+        return req.done
+
     def _admit(self):
         for s in range(self.slots):
-            if self.live[s] is None and self.queue:
-                req = self.queue.pop(0)
+            if self.live[s] is not None:
+                continue
+            while self.queue:
+                req = self.queue.popleft()
                 self._prefill_into_slot(s, req)
+                # the prefill already produced a token: a max_new_tokens=1
+                # (or eos-on-first-token) request is complete HERE and must
+                # retire without ever occupying the slot — it would
+                # otherwise collect a second decode token past its budget
+                if self._finish_check(req, req.tokens[-1]):
+                    self.retired.append(req)
+                    continue  # slot still free: admit the next waiter
                 self.live[s] = req
+                break
 
     def _prefill_into_slot(self, s: int, req: Request):
         """Single-request prefill, then splice its cache rows into slot s."""
@@ -79,27 +106,25 @@ class ServeEngine:
             tok = int(nxt[s])
             req.tokens.append(tok)
             self._last[s] = tok
-            if req.eos_id is not None and tok == req.eos_id:
-                req.done = True
-            if len(req.tokens) >= req.max_new_tokens:
-                req.done = True
-                req.truncated = req.eos_id is not None and tok != req.eos_id
-            if req.done:
+            if self._finish_check(req, tok):
+                self.retired.append(req)
                 self.live[s] = None  # slot freed; stale cache rows are
                 # harmless: admission overwrites them via _splice
         return sum(r is not None for r in self.live)
 
     def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
-        done: list[Request] = []
+        """Tick until queue and slots drain; returns (and clears) the
+        retired list. Retirement is recorded by ``step()`` itself — a
+        before/after snapshot here would lose any request that is admitted
+        AND finishes within one tick (the snapshot predates ``_admit``, so
+        a ``max_new_tokens=1`` request never appeared in it)."""
         ticks = 0
-        while (self.queue or any(self.live)) and ticks < max_ticks:
-            before = [r for r in self.live]
+        while (self.queue or any(r is not None for r in self.live)) \
+                and ticks < max_ticks:
             self.step()
-            for r in before:
-                if r is not None and r.done:
-                    done.append(r)
             ticks += 1
-        return done
+        out, self.retired = self.retired, []
+        return out
 
 
 def _splice(cache, cache1, slot: int, cache_len: int):

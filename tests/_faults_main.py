@@ -311,6 +311,71 @@ def main():
           and wk.shuffle_stats()["kernel_fallbacks"] > f0k
           and retries() == r0k)
 
+    # ---- streaming chaos over gang groups (docs/streaming.md) -------------
+    # 4 tenants on groups(4); one tenant's micro-batch is killed mid-stream.
+    # Lineage replays it, every tenant's folded state stays bit-identical,
+    # and the counters are EXACT (1 retry, 1 injection, 1 counted replay).
+    from repro.streaming import (  # noqa: E402
+        StreamContext, TenantFrontEnd, TenantRequestSource)
+
+    ws = IWorker(ICluster(IProperties({
+        "ignis.executor.instances": "8",
+        "ignis.stream.batch.rows": "16"})), "python")
+
+    def zeros():
+        return np.zeros((2,), np.int64)
+
+    def fe_run(tag):
+        fe = TenantFrontEnd(ws, n_groups=4, name=f"stream-{tag}")
+        for i in range(4):
+            fe.admit(f"t{i}", TenantRequestSource(i, seed=31, limit=96),
+                     init_state=zeros())
+        return fe, fe.run()
+
+    _, st_oracle = fe_run("oracle")
+    r0s = retries()
+    plan_s = FaultPlan().fail_stream_batch(tenant="t2", batch=3)
+    with faults.inject(plan_s):
+        fe_f, st_got = fe_run("chaos")
+    check("p8_stream_batch_kill_bit_identical",
+          all(bool((st_got[t] == st_oracle[t]).all()) for t in st_oracle))
+    check("p8_stream_batch_kill_exact_counters",
+          retries() - r0s == 1 and plan_s.injections("stream.batch") == 1
+          and fe_f.stream("t2").batches_replayed == 1
+          and fe_f.job.stats()["stream"]["batches_replayed"] == 1)
+
+    # a kill that exhausts the retry budget aborts the pump; a NEW pump
+    # restores the last quiesced offset checkpoint and reconverges to the
+    # bit-identical oracle — the exactly-once restart path at p=8
+    ws.cluster.props["ignis.stream.checkpoint.interval"] = "2"
+    ck_dir = tempfile.mkdtemp(prefix="stream-ck-")
+    grp = ws.groups(4)[1]
+
+    def ck_stream(tenant, ckpt=True):
+        return StreamContext(
+            ws, TenantRequestSource(5, seed=31, limit=96), tenant=tenant,
+            group=grp, init_state=zeros(),
+            ckpt_dir=ck_dir if ckpt else None)
+
+    ck_oracle = ck_stream("ck-oracle", ckpt=False).run()
+    r0c = retries()
+    plan_c = FaultPlan().fail_stream_batch(tenant="ck", batch=4, attempt=None)
+    died = False
+    with faults.inject(plan_c):
+        try:
+            ck_stream("ck").run()
+        except faults.FaultInjected:
+            died = True
+    sc2 = ck_stream("ck")
+    st2 = sc2.run()
+    check("p8_stream_ckpt_restart_bit_identical",
+          died and sc2.restored_from is not None
+          and bool((st2 == ck_oracle).all())
+          and sc2.committed == 6 and sc2.offset == 96)
+    check("p8_stream_ckpt_restart_exact_counters",
+          retries() - r0c == 1 and plan_c.injections("stream.batch") == 2
+          and sc2.batches_replayed == 0)
+
     print("ALL_FAULTS_OK")
 
 

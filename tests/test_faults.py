@@ -646,6 +646,99 @@ def test_kernel_stage_budget_exhaustion_surfaces():
 
 
 # ---------------------------------------------------------------------------
+# streaming pumps (docs/streaming.md): stream.batch is a task fault
+# (lineage replay, bit-identical commit), stream.admit is a policy fault
+# (forced shed, no retry), and a checkpointed pump survives a hard kill
+# ---------------------------------------------------------------------------
+
+
+def _stream_worker(worker):
+    worker.cluster.props["ignis.stream.batch.rows"] = "8"
+    return worker
+
+
+def _stream_run(worker, tenant, **kw):
+    from repro.streaming import StreamContext, TenantRequestSource
+
+    sc = StreamContext(worker, TenantRequestSource(0, seed=13, limit=50),
+                       tenant=tenant, init_state=np.zeros((2,), np.int64), **kw)
+    return sc, sc.run()
+
+
+def test_stream_batch_kill_replays_bit_identical(worker):
+    """Killing one micro-batch task mid-stream: the scheduler replays it via
+    lineage, the commit order holds, and the folded state is bit-identical —
+    with EXACTLY one retry, one injection, one counted replay."""
+    w = _stream_worker(worker)
+    _, oracle = _stream_run(w, "oracle")
+    r0 = _retries()
+    plan = FaultPlan().fail_stream_batch(tenant="a", batch=3)
+    with faults.inject(plan):
+        sc, state = _stream_run(w, "a")
+    assert (state == oracle).all()
+    assert _retries() - r0 == 1
+    assert plan.injections("stream.batch") == 1
+    assert sc.batches_replayed == 1
+    assert sc.job.stats()["stream"]["tenants"]["a"]["batches_replayed"] == 1
+
+
+def test_stream_batch_budget_exhaustion_surfaces(worker):
+    """An unbounded kill on one batch exhausts ``ignis.task.attempts`` and
+    the fault surfaces through the pump's in-order commit."""
+    w = _stream_worker(worker)
+    r0 = _retries()
+    plan = FaultPlan().fail_stream_batch(tenant="a", batch=2, attempt=None)
+    with faults.inject(plan):
+        with pytest.raises(FaultInjected):
+            _stream_run(w, "a")
+    assert _retries() - r0 == 1  # one retry, then the budget is spent
+    assert plan.injections("stream.batch") == 2
+
+
+def test_stream_admit_fault_sheds_without_retry(worker):
+    """stream.admit is NOT a task fault: each injection forces one shed
+    decision — counted in telemetry, never retried, offset still advances
+    past the shed batches so the stream completes."""
+    w = _stream_worker(worker)
+    r0 = _retries()
+    plan = FaultPlan().fail_stream_admit(tenant="a", times=2)
+    with faults.inject(plan):
+        sc, _ = _stream_run(w, "a")
+    assert sc.shed_batches == 2
+    assert sc.committed == 5  # 7 polled batches, 2 shed
+    assert sc.offset == 50  # the cursor still reaches the end of the stream
+    assert _retries() == r0
+    assert plan.injections("stream.admit") == 2
+    snap = sc.job.stats()["stream"]["tenants"]["a"]
+    assert snap["shed"] == 2 and snap["completed"] == 5
+
+
+def test_stream_kill_then_restart_resumes_from_checkpoint(worker, tmp_path):
+    """The acceptance scenario: a micro-batch kill that exhausts its retry
+    budget aborts the pump; a NEW pump restores the last quiesced offset
+    checkpoint and reconverges to the bit-identical oracle state."""
+    w = _stream_worker(worker)
+    _, oracle = _stream_run(w, "oracle")
+    w.cluster.props["ignis.stream.checkpoint.interval"] = "2"
+    d = str(tmp_path / "ck")
+    r0 = _retries()
+    plan = FaultPlan().fail_stream_batch(tenant="a", batch=5, attempt=None)
+    with faults.inject(plan):
+        with pytest.raises(FaultInjected):
+            _stream_run(w, "a", ckpt_dir=d)
+    assert _retries() - r0 == 1
+    assert plan.injections("stream.batch") == 2
+    # restart without the fault: resume from the last quiesced checkpoint
+    # (the interval cut drains in-flight batches first, so the exact step
+    # depends on how far the pump ran ahead — the bit-identity does not)
+    sc2, state = _stream_run(w, "a", ckpt_dir=d)
+    assert sc2.restored_from is not None and 2 <= sc2.restored_from <= 5
+    assert (state == oracle).all()
+    assert sc2.offset == 50 and sc2.committed == 7
+    assert sc2.batches_replayed == 0  # replay-by-restart, not re-commit
+
+
+# ---------------------------------------------------------------------------
 # the p=8 chaos matrix (subprocess: the 8-device flag must not leak here)
 # ---------------------------------------------------------------------------
 

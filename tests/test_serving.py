@@ -52,6 +52,62 @@ def test_engine_slot_reuse_and_truncation():
     assert all(len(r.tokens) == 4 for r in done)
 
 
+def test_engine_single_tick_request_not_lost():
+    """Regression: a request admitted AND finished within one tick must be
+    reported. The old run_to_completion diffed a before/after snapshot taken
+    AFTER _admit had already run, so a max_new_tokens=1 request (done at
+    prefill) never appeared in the output."""
+    cfg = get_config("ignis-tiny")
+    bundle = build_model(cfg)
+    params = bundle.init(KEY)
+    eng = ServeEngine(bundle, params, slots=2, cache_len=32)
+    prompt = np.asarray([1, 2, 3], np.int32)
+    for i in range(4):
+        eng.submit(Request(i, prompt, max_new_tokens=1))
+    done = eng.run_to_completion()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    # budget honored exactly: prefill's token is the first AND last
+    assert all(len(r.tokens) == 1 and r.done for r in done)
+    # and the single token matches the greedy reference
+    ref = _greedy_reference(bundle, params, prompt, 1)
+    assert all(r.tokens == ref for r in done)
+
+
+def test_engine_queue_is_deque_fifo():
+    """Admission order is FIFO and the queue supports O(1) head pops."""
+    from collections import deque
+
+    cfg = get_config("ignis-tiny")
+    bundle = build_model(cfg)
+    params = bundle.init(KEY)
+    eng = ServeEngine(bundle, params, slots=1, cache_len=32)
+    assert isinstance(eng.queue, deque)
+    for i in range(5):
+        eng.submit(Request(i, np.asarray([7, i], np.int32), max_new_tokens=2))
+    done = eng.run_to_completion()
+    assert [r.rid for r in done] == [0, 1, 2, 3, 4]
+
+
+def test_engine_eos_at_prefill_frees_slot():
+    """A request whose very first (prefill) token hits eos retires without
+    ever occupying a decode slot, so the waiter behind it is admitted in
+    the same tick."""
+    cfg = get_config("ignis-tiny")
+    bundle = build_model(cfg)
+    params = bundle.init(KEY)
+    prompt = np.asarray([1, 2, 3], np.int32)
+    first = _greedy_reference(bundle, params, prompt, 1)[0]
+    eng = ServeEngine(bundle, params, slots=1, cache_len=32)
+    eng.submit(Request(0, prompt, max_new_tokens=8, eos_id=first))
+    eng.submit(Request(1, prompt, max_new_tokens=2))
+    eng._admit()
+    assert [r.rid for r in eng.retired] == [0]
+    assert eng.live[0] is not None and eng.live[0].rid == 1
+    done = eng.run_to_completion()
+    assert sorted(r.rid for r in done) == [0, 1]
+    assert done[0].tokens == [first] and not done[0].truncated
+
+
 def test_engine_with_ssm_family():
     """Continuous batching over an O(1)-state SSM (no KV slab growth)."""
     from repro.configs import get_config as _gc

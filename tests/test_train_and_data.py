@@ -1,10 +1,15 @@
 """Train loop: loss decreases, checkpoint resume continues, data pipeline."""
+import time
+
 import numpy as np
 
 from repro.data.pipeline import (
     BOS,
     EOS,
+    PAD,
+    TrainPipeline,
     byte_tokenize,
+    loss_mask_for,
     pack_sequences,
     batches_from_rows,
 )
@@ -30,6 +35,79 @@ def test_batches_cycle():
     batches = list(it)
     assert len(batches) == 4  # 2 per epoch × 2 epochs
     assert batches[0]["tokens"].shape == (4, 4)
+
+
+def test_pack_sequences_reports_dropped_tail():
+    # 2 docs * (1 BOS + 3 toks + 1 EOS) = 10 stream tokens; L = 9 -> 1 row,
+    # 1 token dropped off the tail
+    docs = [byte_tokenize("aaa"), byte_tokenize("bbb")]
+    stats = {}
+    rows = pack_sequences(docs, seq_len=8, stats=stats)
+    assert rows.shape == (1, 9)
+    assert stats["stream_tokens"] == 10
+    assert stats["packed_rows"] == 1
+    assert stats["dropped_tail_tokens"] == 1
+    # exact alignment: no tail dropped
+    stats2 = {}
+    pack_sequences([byte_tokenize("a" * 7)], seq_len=8, stats=stats2)
+    assert stats2["dropped_tail_tokens"] == 0
+
+
+def test_batches_emit_loss_mask_and_negative_pad_labels():
+    # short doc -> the single packed row is mostly PAD filler
+    rows = pack_sequences([byte_tokenize("ab")], seq_len=8)
+    (b,) = list(batches_from_rows(rows, batch=1, epochs=1))
+    labels_raw = rows[:, 1:]
+    expect_mask = labels_raw != PAD
+    assert b["loss_mask"].dtype == np.bool_
+    assert (b["loss_mask"] == expect_mask).all()
+    assert (expect_mask == loss_mask_for(labels_raw)).all()
+    # PAD positions train on label -1 (the CE layer masks negatives);
+    # real positions keep their token ids
+    assert (b["labels"][~b["loss_mask"]] == -1).all()
+    assert (b["labels"][b["loss_mask"]] == labels_raw[expect_mask]).all()
+    assert (b["tokens"] == rows[:, :-1]).all()
+
+
+def test_batches_report_dropped_partial_rows():
+    rows = np.arange(50, dtype=np.int32).reshape(10, 5)
+    stats = {}
+    out = list(batches_from_rows(rows, batch=4, epochs=2, stats=stats))
+    assert len(out) == 4  # 2 full batches per epoch, 2 rows dropped each
+    assert stats["dropped_partial_rows"] == 4
+    assert stats["epochs_done"] == 2
+
+
+def test_pipeline_close_returns_with_full_queue():
+    """Regression: the producer used a blocking Queue.put, so once the
+    bounded queue filled and the consumer stopped, close() could never
+    join the wedged thread."""
+
+    def endless():
+        i = 0
+        while True:
+            yield {"tokens": np.full((2, 2), i, np.int32)}
+            i += 1
+
+    pipe = TrainPipeline(endless(), depth=2)
+    next(pipe)  # consume one, then walk away with the queue full
+    deadline = time.monotonic() + 2.0
+    while not pipe._q.full() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert pipe._q.full()
+    t0 = time.monotonic()
+    pipe.close()
+    assert time.monotonic() - t0 < 5.0
+    assert not pipe._thread.is_alive()
+
+
+def test_pipeline_drains_finite_iterator():
+    rows = np.arange(40, dtype=np.int32).reshape(8, 5)
+    pipe = TrainPipeline(batches_from_rows(rows, batch=4, epochs=1), depth=2)
+    got = list(pipe)
+    assert len(got) == 2
+    pipe.close()
+    assert not pipe._thread.is_alive()
 
 
 def test_train_decreases_loss_and_resumes(tmp_path):

@@ -55,8 +55,10 @@ from pathlib import Path
 
 # counters whose increase is a regression on any machine; matched by exact
 # name OR suffix (``kernel_recompiles`` gates like ``recompiles`` —
-# bench_kernels' repeat-warm row)
-_GATED_COUNTERS = ("retries", "recompiles", "retunes")
+# bench_kernels' repeat-warm row; ``batches_replayed``/``shed`` gate the
+# streaming clean arms, and ``faulted_batches_replayed`` pins the recovery
+# arm's replay count at its baseline of exactly 1 — docs/streaming.md)
+_GATED_COUNTERS = ("retries", "recompiles", "retunes", "replayed", "shed")
 _KV = re.compile(r"\b([A-Za-z_][A-Za-z0-9_]*)=([0-9.]+)(x?)\b")
 
 
