@@ -1,0 +1,264 @@
+"""Cost-model benchmarks (DESIGN.md §13, docs/profiling.md): replay
+accuracy against a real 8-device gang-scheduled trace, a deterministic
+what-if replay, and the cost-aware fusion policy against the static one.
+
+Three claims, three rows:
+
+  * **cost_replay_accuracy** — a two-gang job runs on an 8-device mesh
+    under an attached ``JobTracer``; the capture replays under the
+    identity hypothesis and the predicted makespan must land within 25%
+    of the measured one (``replay_accuracy`` factor, ``target=0.75``).
+    The same child validates the exported Chrome trace against the span
+    schema (``validate()``) and writes it as the CI timeline artifact.
+  * **cost_whatif_replay** — the same capture replayed under
+    ``Hypothesis(lanes=1)``: consolidating the two gang lanes onto one
+    must predict a LONGER makespan (the simulator respects lane
+    serialisation), and two runs of the same simulation must produce the
+    identical schedule — determinism is asserted in the child.
+  * **cost_vs_static_fusion** — the shape-churn regime the static policy
+    handles badly: batches of 3-op narrow chains whose stage signatures
+    NEVER repeat (fresh op permutations from a fixed warm library).
+    Static fuses every chain and pays an XLA compile per signature for
+    dispatch savings it never banks; the cost policy defers first
+    sightings and runs the warm per-op kernels. Interleaved per-iteration
+    ratios (static wall / cost wall), median reported — the same
+    drift-defence as bench_groups. On a repeated signature both arms
+    converge (cost fuses from the second sighting); reported as the
+    ungated ``repeat_ratio``.
+
+The replay rows need 8 devices, so ``bench()`` re-executes this file in a
+subprocess with ``--xla_force_host_platform_device_count=8`` (the same
+isolation rule as bench_groups — the flag must never leak into the
+caller).
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import subprocess
+import sys
+import time
+
+
+# fixed op library: module-level defs, stable code objects, so every op's
+# vmapped kernel jits ONCE (executor._VMAP_JIT) while 3-op permutations
+# give C(6,3)·3! = 120 distinct never-repeating stage signatures
+def _op_add(x):
+    return x + 1
+
+
+def _op_mul(x):
+    return x * 2
+
+
+def _op_sub(x):
+    return x - 3
+
+
+def _op_xor(x):
+    return x ^ 5
+
+
+def _op_sq(x):
+    return x * x
+
+
+def _op_neg(x):
+    return -x
+
+
+_OPS = (_op_add, _op_mul, _op_sub, _op_xor, _op_sq, _op_neg)
+
+
+# ---------------------------------------------------------------------------
+# replay accuracy + what-if (8-device child)
+# ---------------------------------------------------------------------------
+
+
+def _child(n: int, gang_actions: int, trace_out: str) -> list:
+    import numpy as np
+    import jax.numpy as jnp
+
+    from benchmarks.common import row
+    from repro.core import ICluster, IProperties, IWorker
+    from repro.core.job import IJob
+    from repro.profile import (Hypothesis, JobTracer, capture,
+                               predicted_vs_measured, simulate, validate)
+
+    cluster = ICluster(IProperties({"ignis.executor.instances": "8"}))
+    w = IWorker(cluster, "spmd")
+    g0, g1 = w.groups(2)
+
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 100_000, n).astype(np.int32)
+
+    def submit(job):
+        futs = []
+        for _ in range(gang_actions):
+            df = w.parallelize(vals).map(lambda x: x * 2 + 1)
+            futs.append(df.count_async(job=job))
+            kv = w.parallelize(vals).map(
+                lambda x: {"key": x % 53, "value": jnp.int32(1)})
+            futs.append(kv.reduce_by_key(lambda a, b: a + b, 0)
+                        .count_async(job=job))
+        return futs
+
+    # warm-up: compile both gang widths before the measured capture, so the
+    # trace measures steady-state scheduling, not first-touch XLA compiles
+    for f in submit(IJob("warmA", group=g0)) + submit(IJob("warmB", group=g1)):
+        f.result(600)
+
+    tracer = JobTracer()
+    tracer.attach_worker(w)
+    job = IJob("gangpair", gang=2)  # deals tasks round-robin over 2 groups
+    tracer.attach(job)
+    t0 = time.perf_counter()
+    for f in submit(job):
+        f.result(600)
+    wall = time.perf_counter() - t0
+
+    r = predicted_vs_measured(job)
+    trace = capture(job)
+
+    # what-if: both gang lanes consolidated onto one — strictly less
+    # parallelism, so the simulator must predict a makespan no shorter
+    # than identity, and identically twice (determinism)
+    ident = simulate(trace)
+    s1 = simulate(trace, Hypothesis(lanes=1))
+    s2 = simulate(trace, Hypothesis(lanes=1))
+    assert s1 == s2, "what-if replay is not deterministic"
+    assert s1.makespan_s >= ident.makespan_s * 0.999, (
+        s1.makespan_s, ident.makespan_s)
+
+    chrome = tracer.to_chrome()
+    violations = validate(chrome)
+    assert not violations, violations[:5]
+    if trace_out:
+        tracer.save(trace_out)
+
+    return [
+        row("cost_replay_accuracy", wall,
+            f"replay_accuracy={r['accuracy']:.2f}x target=0.75 "
+            f"tasks={r['tasks']} lanes={r['lanes']} "
+            f"schema_violations={len(violations)} world=8"),
+        row("cost_whatif_replay", s1.makespan_s,
+            f"whatif_lanes1_vs_identity={s1.makespan_s / max(ident.makespan_s, 1e-9):.2f}x "
+            f"identity_ms={ident.makespan_s * 1e3:.1f} deterministic=1"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# cost-aware vs static fusion (in-process)
+# ---------------------------------------------------------------------------
+
+
+def _fusion_rows(n: int, chains: int, iters: int) -> list:
+    import numpy as np
+
+    from benchmarks.common import row
+    from repro.core import ICluster, IProperties, IWorker
+
+    def make_worker(mode):
+        cl = ICluster(IProperties({"ignis.fusion.mode": mode}))
+        return IWorker(cl, "python")
+
+    w_static = make_worker("static")
+    w_cost = make_worker("cost")
+    data = np.arange(n, dtype=np.int32)
+
+    def run_batch(w, batch):
+        total = 0
+        for ops in batch:
+            df = w.parallelize(data)
+            for f in ops:
+                df = df.map(f)
+            total += int(df.reduce(lambda a, b: a + b))
+        return total
+
+    # warm the per-op kernel jits (global executor cache, shared by both
+    # arms) with single-op runs — single ops never fuse in either mode
+    for f in _OPS:
+        run_batch(w_static, [(f,)])
+        run_batch(w_cost, [(f,)])
+
+    # fresh 3-op signatures per iteration, same batch fed to BOTH arms
+    # within the iteration (interleaved; median of per-iteration ratios)
+    perms = itertools.permutations(_OPS, 3)
+    ts, tc, ratios = [], [], []
+    for _ in range(iters):
+        batch = list(itertools.islice(perms, chains))
+        assert len(batch) == chains, "op library exhausted; shrink iters*chains"
+        t0 = time.perf_counter()
+        r_static = run_batch(w_static, batch)
+        t1 = time.perf_counter()
+        r_cost = run_batch(w_cost, batch)
+        t2 = time.perf_counter()
+        assert r_static == r_cost, (r_static, r_cost)  # correctness parity
+        ts.append(t1 - t0)
+        tc.append(t2 - t1)
+        ratios.append((t1 - t0) / (t2 - t1))
+
+    t_static = sorted(ts)[len(ts) // 2]
+    t_cost = sorted(tc)[len(tc) // 2]
+    speedup = sorted(ratios)[len(ratios) // 2]
+
+    # repeated-signature regime: one fixed chain run twice per arm — the
+    # cost policy fuses from the second sighting, so the arms converge
+    fixed = (_op_add, _op_mul, _op_sub)
+    for w in (w_static, w_cost):
+        run_batch(w, [fixed])
+    t0 = time.perf_counter()
+    run_batch(w_static, [fixed])
+    t1 = time.perf_counter()
+    run_batch(w_cost, [fixed])
+    t2 = time.perf_counter()
+    repeat_ratio = (t1 - t0) / max(t2 - t1, 1e-9)
+
+    est = w_static.engine.stats
+    ecc = w_cost.engine.stats
+    cost_snap = w_cost.engine.cost_model.snapshot()
+    return [
+        row("cost_fusion_static_arm", t_static,
+            f"chains={chains} n={n} fused={est['fused_stages']}"),
+        row("cost_fusion_cost_arm", t_cost,
+            f"deferred={ecc['fusion_deferred']} fused={ecc['fused_stages']} "
+            f"decisions={cost_snap['fuse_decisions']}"),
+        row("cost_vs_static_fusion", 0.0,
+            f"cost_vs_static={speedup:.2f}x target=1.2 "
+            f"repeat_ratio={repeat_ratio:.2f} chains={chains} iters={iters}"),
+    ]
+
+
+def bench(n: int = 1 << 12, chains: int = 10, iters: int = 5,
+          gang_actions: int = 6, trace_out: str | None = None) -> list:
+    if trace_out is None:
+        trace_out = os.environ.get("IGNIS_TRACE_OUT",
+                                   "bench-trace-cost-model.json")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child", str(n),
+         str(gang_actions), os.path.abspath(trace_out)],
+        env=env, capture_output=True, text=True, timeout=1200, cwd=root,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_cost_model child failed:\n{r.stderr[-2000:]}")
+    rows = [ln[len("ROW "):] for ln in r.stdout.splitlines()
+            if ln.startswith("ROW ")]
+    if not rows:
+        raise RuntimeError(f"bench_cost_model child emitted no rows:\n{r.stdout}")
+    return rows + _fusion_rows(n, chains, iters)
+
+
+if __name__ == "__main__":
+    if sys.argv[1:2] == ["--child"]:
+        n, gang_actions = int(sys.argv[2]), int(sys.argv[3])
+        for out_row in _child(n, gang_actions, sys.argv[4]):
+            print(f"ROW {out_row}")
+    else:
+        from benchmarks.common import emit
+
+        emit(bench())

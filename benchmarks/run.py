@@ -12,6 +12,8 @@
   §11 (ours) bench_kernels     Pallas kernel tier vs jnp oracles, wide stages
   §2.2/§5    bench_groups      gang-scheduled jobs on disjoint sub-meshes
   §12 (ours) bench_streaming   multi-tenant micro-batch pumps vs sequential
+  §13 (ours) bench_cost_model  replay accuracy on a gang trace, what-if
+                               replay, cost-aware vs static fusion
   Table 5    bench_sloc        integration SLOC
   (ours)     roofline          §Roofline summary from the dry-run artifacts
 
@@ -44,6 +46,7 @@ SMOKE_KWARGS = {
     "recovery": {"n": 20_000, "iters": 3},
     "streaming": {"tenants": 4, "batches": 24, "rows_per_batch": 16,
                   "iters": 2},
+    "cost_model": {"n": 1 << 10, "chains": 4, "iters": 2, "gang_actions": 4},
 }
 
 BENCHES = [
@@ -59,6 +62,7 @@ BENCHES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("groups", "benchmarks.bench_groups"),
     ("streaming", "benchmarks.bench_streaming"),
+    ("cost_model", "benchmarks.bench_cost_model"),
     ("recovery", "benchmarks.bench_recovery"),
     ("sloc", "benchmarks.bench_sloc"),
     ("roofline", "benchmarks.roofline"),

@@ -22,6 +22,7 @@ from repro.core import compat
 from repro.core import faults
 from repro.core.context import IContext
 from repro.core.dag import DagEngine, TaskNode, node_sig
+from repro.core.metrics import MetricsTree, warn_deprecated
 from repro.core.shuffle_plan import ShuffleManager
 from repro.core.dataframe import IDataFrame
 from repro.core.native import get_app, load_library
@@ -112,7 +113,15 @@ class IWorker:
         self.engine = DagEngine(
             fusion=cluster.props.get_bool("ignis.fusion.enabled", True),
             plan_cache_size=cluster.props.get_int("ignis.fusion.plan.cache.size", 128),
+            fusion_mode=cluster.props.get("ignis.fusion.mode", "static"),
         )
+        # the cost model (docs/profiling.md): every worker carries one —
+        # cost-mode fusion prices chains through it, the scheduler feeds it
+        # task-duration history, and timeout=auto reads that history. Pure
+        # python and cheap; imported lazily to keep core importable alone.
+        from repro.profile.cost import CostModel
+
+        self.engine.cost_model = CostModel()
         self.mode = cluster.props.get("ignis.mode", "ignis")
         self.capacity_factor = cluster.props.get_float("ignis.shuffle.capacity.factor", 2.0)
         self.join_max_matches = cluster.props.get_int("ignis.join.max.matches", 8)
@@ -131,6 +140,16 @@ class IWorker:
             ),
         )
         self._libraries: list[str] = []
+        # unified introspection tree (docs/profiling.md): every subsystem's
+        # counter namespace mounted under one surface. `coll` is a thunk —
+        # the collective engine is process-wide and snapshots under its own
+        # lock. JobTracer.attach(worker=...) mounts `profile` here.
+        self._metrics = MetricsTree(
+            stages=self.engine.stats,
+            shuffle=self.shuffle.stats,
+            kernels=self.shuffle.kernels.stats,
+            coll=comm_mod.comm_stats,
+        )
         # job-scheduler serialisation points (core/job.py): the base lock
         # covers the whole worker; gang-scheduled tasks instead hold one
         # GROUP lock each, so two tasks on disjoint sub-meshes of this
@@ -268,21 +287,40 @@ class IWorker:
         shuffle capacity annotations, shuffle telemetry."""
         return df.explain()
 
+    def metrics(self, path: str | None = None) -> dict:
+        """The worker's namespaced metrics tree (docs/profiling.md §metrics):
+        ``stages/`` (DagEngine), ``shuffle/`` (ShuffleManager), ``kernels/``
+        (kernel tier), ``coll/`` (process-wide collective engine), and
+        ``profile/`` once a tracer is mounted. ``path`` selects one subtree
+        (``metrics("stages")``); unknown paths raise ``KeyError``."""
+        return self._metrics.snapshot(path)
+
+    def mount_metrics(self, name: str, source) -> None:
+        """Mount (or re-mount) a counter namespace on this worker's metrics
+        tree — how JobTracer exposes ``profile/`` (docs/profiling.md)."""
+        self._metrics.mount(name, source)
+
     def stage_stats(self) -> dict:
-        """Engine telemetry snapshot: node/block computes, fused stage runs,
-        plan-cache hits/misses/evictions."""
-        return dict(self.engine.stats)
+        """Deprecated facade over ``metrics("stages")`` — engine telemetry
+        snapshot: node/block computes, fused stage runs, plan-cache
+        hits/misses/evictions. Same keys as always."""
+        warn_deprecated("IWorker.stage_stats()", 'IWorker.metrics("stages")')
+        return self._metrics.snapshot("stages")
 
     def shuffle_stats(self) -> dict:
-        """Adaptive shuffle engine telemetry (DESIGN.md §6): exchanges,
-        overflow/fan-out retries, deferred checks, capacity-memory hits,
-        wide-plan compiles/hits, bytes moved — plus the kernel tier's
-        selection/autotune counters (``kernel_hits`` / ``kernel_fallbacks``
-        / ``autotune_runs``, docs/kernels.md) and the collective engine's
+        """Deprecated facade over the ``shuffle`` + ``kernels`` + ``coll``
+        metrics subtrees, merged flat exactly as before PR 9: adaptive
+        shuffle engine telemetry (DESIGN.md §6) — exchanges, overflow/
+        fan-out retries, deferred checks, capacity-memory hits, wide-plan
+        compiles/hits, bytes moved — plus the kernel tier's selection/
+        autotune counters (docs/kernels.md) and the collective engine's
         persistent-plan and handle counters (DESIGN.md §10; process-wide,
         so two workers sharing one mesh see one set of plan counters)."""
-        return {**self.shuffle.stats, **self.shuffle.kernels.stats,
-                **comm_mod.comm_stats()}
+        warn_deprecated("IWorker.shuffle_stats()",
+                        'IWorker.metrics("shuffle"/"kernels"/"coll")')
+        return {**self._metrics.snapshot("shuffle"),
+                **self._metrics.snapshot("kernels"),
+                **self._metrics.snapshot("coll")}
 
     # ------------------------------------------------------------------
     # data ingestion (driver communicator)

@@ -57,6 +57,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat, faults
 from repro.core.context import IContext
+from repro.core.metrics import Counters
 
 _handle_ids = itertools.count()
 
@@ -223,14 +224,14 @@ class CommEngine:
         self._plans: "OrderedDict[tuple, Callable]" = OrderedDict()
         self._building: dict = {}  # key -> Event: trace+jit in flight
         self._lock = threading.Lock()
-        self.stats = {
+        self.stats = Counters("coll", {
             "coll_calls": 0,          # collectives dispatched (any shape)
             "coll_plan_hits": 0,      # persistent-plan cache hits
             "coll_plan_misses": 0,    # traces+compiles (init-once events)
             "coll_plan_evictions": 0,
             "handles_created": 0,
             "handles_awaited": 0,
-        }
+        })
 
     def stats_bump(self, key: str, n: int = 1):
         with self._lock:

@@ -22,11 +22,13 @@ individual blocks by walking the original narrow chain.
 from __future__ import annotations
 
 import itertools
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from repro.core import comm, faults
+from repro.core.metrics import Counters
 
 _ids = itertools.count()
 
@@ -121,8 +123,17 @@ class DagEngine:
     ``fusion=True`` enables the stage-compilation planner; the compiled-plan
     cache holds up to ``plan_cache_size`` jitted stage kernels (LRU)."""
 
-    def __init__(self, fusion: bool = True, plan_cache_size: int = 128):
+    def __init__(self, fusion: bool = True, plan_cache_size: int = 128,
+                 fusion_mode: str = "static", cost_model=None):
         self.fusion = fusion
+        # fusion boundary policy (docs/profiling.md §fusion): "static"
+        # fuses every eligible chain; "cost" asks the cost model whether
+        # the stage's XLA compile will pay for itself
+        self.fusion_mode = fusion_mode
+        self.cost_model = cost_model  # repro.profile.cost.CostModel | None
+        # live span hook (docs/profiling.md): JobTracer.attach_worker sets
+        # this to its buffer's record(name, cat, t0, t1, **args)
+        self.trace_hook = None
         self.plan_cache_size = plan_cache_size
         self._plan_cache: "OrderedDict[tuple, Callable]" = OrderedDict()
         # gang-scheduled tasks (core/job.py) enter one engine from several
@@ -131,7 +142,9 @@ class DagEngine:
         import threading
 
         self._plan_lock = threading.Lock()
-        self.stats = {
+        # the "stages/" namespace of the worker's metrics tree
+        # (core/metrics.py; worker.stage_stats() is the legacy facade)
+        self.stats = Counters("stages", {
             "node_computes": 0,
             "wide_computes": 0,
             "block_recomputes": 0,
@@ -144,7 +157,8 @@ class DagEngine:
             "block_restores": 0,  # blocks repaired from a checkpoint
             "speculative_retries": 0,  # straggler duplicates launched
             "handle_awaits": 0,  # CollHandle-valued node results awaited
-        }
+            "fusion_deferred": 0,  # chains the cost policy left unfused
+        })
 
     # ---- planner (stage compilation) ----------------------------------------
     @staticmethod
@@ -185,14 +199,25 @@ class DagEngine:
                 stack.append((child, expand(child)))
         return order, refs
 
-    def plan(self, root: TaskNode) -> dict[TaskNode, FusedStage]:
+    def plan(self, root: TaskNode,
+             observe: bool = True) -> dict[TaskNode, FusedStage]:
         """Plan the action: map each fused-stage *tail* to its FusedStage.
 
         A chain grows from a tail down through parents that are fusable, not
         cached, unmaterialised and single-consumer — every condition marks a
-        node whose blocks someone else needs, i.e. a stage boundary."""
+        node whose blocks someone else needs, i.e. a stage boundary.
+
+        Under ``fusion_mode="cost"`` each maximal chain additionally passes
+        through ``CostModel.should_fuse`` (docs/profiling.md §fusion): a
+        first-sighting signature whose dispatch savings cannot amortise the
+        XLA compile is left UNFUSED this evaluation (counted in
+        ``fusion_deferred``) and fuses from its second sighting, once the
+        plan-cache reuse the compile needs is evidenced. ``observe=False``
+        (``explain()``) makes the decision read-only so rendering a plan
+        never perturbs it."""
         if not self.fusion:
             return {}
+        pricing = self.fusion_mode == "cost" and self.cost_model is not None
         order, refs = self._walk(root)
         plans: dict[TaskNode, FusedStage] = {}
         absorbed: set[TaskNode] = set()
@@ -211,7 +236,23 @@ class DagEngine:
                 p = p.parents[0]
             if len(chain) >= 2:
                 chain.reverse()
-                plans[node] = FusedStage(chain)
+                stage = FusedStage(chain)
+                if pricing:
+                    # block-count hint: a materialised stage input tells us
+                    # how many dispatches one run saves; unknown → 1
+                    src = stage.head.parents[0]
+                    nblocks = (len(src.result)
+                               if getattr(src, "result", None) else 1)
+                    if observe:
+                        fuse = self.cost_model.should_fuse(
+                            stage.signature, len(chain), nblocks)
+                    else:
+                        fuse = self.cost_model.peek_fuse(stage.signature)
+                    if not fuse:
+                        self.stats["fusion_deferred"] += 1
+                        absorbed.update(chain)  # evaluate unfused this time
+                        continue
+                plans[node] = stage
                 absorbed.update(chain)
         return plans
 
@@ -220,7 +261,7 @@ class DagEngine:
 
         ``annotate(node) -> str`` lets another subsystem append per-node
         state (the shuffle engine adds capacity-memory annotations)."""
-        plans = self.plan(root)
+        plans = self.plan(root, observe=False)
         lines = ["== physical plan =="]
         emitted: set[int] = set()
 
@@ -387,7 +428,12 @@ class DagEngine:
             return out
         faults.check("dag.node", op=node.op)
         self.stats["wide_computes"] += 1
+        hook = self.trace_hook
+        t0 = time.perf_counter() if hook is not None else 0.0
         out = node.fn(parent_results)
+        if hook is not None:
+            hook(f"wide:{node.op}", "engine", t0, time.perf_counter(),
+                 op=node.op, node=node.id)
         if comm.is_handle(out):
             # a wide/native node may return a nonblocking collective handle
             # (e.g. an SPMD app handing back an in-flight result); the
@@ -404,12 +450,18 @@ class DagEngine:
         from repro.core.partition import Block
 
         parent_blocks = self._eval(stage.head.parents[0], memo, plans)
+        hook = self.trace_hook
+        t0 = time.perf_counter() if hook is not None else 0.0
         out = []
         for i, b in enumerate(parent_blocks):
             faults.check("dag.block", op=stage.tail.op, block=i, fused=True)
             fn = self._compiled(stage, b)
             data, valid = fn(b.data, b.valid)
             out.append(Block(data, valid))
+        if hook is not None:
+            hook(f"stage:{stage.tail.op}", "engine", t0, time.perf_counter(),
+                 ops=len(stage.nodes), blocks=len(out),
+                 stage=stage.describe())
         for n in stage.nodes:  # telemetry parity with the unfused path
             n.compute_count += 1
         self.stats["node_computes"] += len(stage.nodes)

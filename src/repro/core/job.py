@@ -32,8 +32,23 @@ from typing import Any, Callable, Optional
 
 from repro.core import comm, faults
 from repro.core.dag import _OverlayMemo
+from repro.core.metrics import Counters, MetricsTree, warn_deprecated
 
 _task_ids = itertools.count()
+
+
+def task_history_key(task) -> tuple:
+    """The cost-model history key for a task — structural, so retries and
+    re-submissions of the same logical work share one duration history
+    (docs/profiling.md §auto). Node-backed tasks key on their node's
+    signature; action tasks on the action name."""
+    from repro.core.dag import node_sig
+
+    node = getattr(task, "node", None)
+    if node is not None:
+        return (task.kind, node_sig(node))
+    return (task.kind, task.name.split("(", 1)[0])
+
 
 PENDING = "pending"
 RUNNING = "running"
@@ -49,6 +64,10 @@ class JobTask:
         "remaining", "state", "result", "error", "event", "callbacks",
         "cb_lock", "scheduler", "t_submit", "t_start", "t_end",
         "group", "node", "lock", "attempt", "attempts", "lock_dropped",
+        # profiling (docs/profiling.md): the thread that ran the body, the
+        # serialisation-lock wait that preceded it, the compute→settle
+        # phase boundary timestamps, and the job's tracer (if attached)
+        "tid", "t_lock_wait", "t_compute_end", "t_settle_end", "tracer",
     )
 
     def __init__(self, name: str, kind: str, worker, fn: Callable[[], Any],
@@ -72,6 +91,11 @@ class JobTask:
         self.t_submit = time.perf_counter()
         self.t_start = 0.0
         self.t_end = 0.0
+        self.tid = 0
+        self.t_lock_wait = 0.0
+        self.t_compute_end = 0.0
+        self.t_settle_end = 0.0
+        self.tracer = None
         # gang scheduling (docs/collectives.md): the group communicator this
         # task executes on (None → the worker's base mesh), the TaskNode it
         # materialises (for inter-group reshard edges), and the serialisation
@@ -201,7 +225,7 @@ class JobScheduler:
         # lock-holder (cooperative wait in IFuture.result) may claim and run
         # one guarded by a lock it holds
         self._claimable: list[JobTask] = []
-        self.stats = {
+        self.stats = Counters("scheduler", {
             "jobs_submitted": 0,
             "tasks_submitted": 0,
             "tasks_completed": 0,
@@ -214,7 +238,7 @@ class JobScheduler:
             "task_retries": 0,     # recoverable-failure re-runs (faults.py)
             "coll_awaits": 0,      # handle-valued task results awaited here
             "coll_flushed": 0,     # never-awaited handles drained at task end
-        }
+        })
 
     # ------------------------------------------------------------------
     def _ensure_pool(self):
@@ -321,11 +345,14 @@ class JobScheduler:
         # cannot be released from any other thread, so skipping here would
         # leak the worker/group lock forever.
         lock = task.lock
+        lock_wait = 0.0
         if lock is not None:
+            t0 = time.perf_counter()
             lock.acquire()
+            lock_wait = time.perf_counter() - t0
         claimed: list = []
         try:
-            self._run_locked(task, claimed)
+            self._run_locked(task, claimed, lock_wait=lock_wait)
         finally:
             if lock is not None and not (claimed and task.lock_dropped):
                 lock.release()
@@ -382,7 +409,8 @@ class JobScheduler:
                 self.stats["coll_flushed"] += flushed
         return result
 
-    def _run_locked(self, task: JobTask, claimed: Optional[list] = None):
+    def _run_locked(self, task: JobTask, claimed: Optional[list] = None,
+                    lock_wait: float = 0.0):
         with self._lock:
             if task.state != PENDING:  # cascaded failure or claimed elsewhere
                 return  # back-off: the caller's finally releases its acquire
@@ -397,6 +425,8 @@ class JobScheduler:
                 self.stats["max_concurrent"], self._running
             )
         task.t_start = time.perf_counter()
+        task.t_lock_wait = lock_wait
+        task.tid = threading.get_ident()
         held = getattr(self._local, "held_locks", ())
         error = None
         try:
@@ -435,8 +465,10 @@ class JobScheduler:
                         # and an injected fault on either re-enters THIS
                         # retry loop, re-running the task fn and re-issuing
                         # its collectives.
+                        task.t_compute_end = time.perf_counter()
                         task.result = self._settle(task, task.result,
                                                    pending, held)
+                        task.t_settle_end = time.perf_counter()
                         break
                     except BaseException as e:
                         task.attempt += 1
@@ -466,9 +498,32 @@ class JobScheduler:
             task.fn = None  # never called again — release the closure (and
             # with it the job memo / blocks it pins) once the task resolves
             dependents = list(task.dependents)
+        self._observe(task, error)
         self._resolve(task)
         for dep in dependents:
             self._dep_resolved(dep, task)
+
+    def _observe(self, task: JobTask, error):
+        """Feed the profiling surfaces as a task resolves: the attached
+        tracer's span buffer (docs/profiling.md), and — for successful
+        runs — the owning worker's cost-model task history, which is what
+        ``ignis.task.speculative.timeout=auto`` derives deadlines from.
+        Observation must never poison the DAG: failures are swallowed."""
+        tracer = task.tracer
+        if tracer is not None:
+            try:
+                tracer.task_done(task)
+            except Exception:
+                pass
+        model = getattr(getattr(task.worker, "engine", None),
+                        "cost_model", None)
+        if (model is not None and error is None
+                and (tracer is None or tracer.cost is not model)):
+            try:
+                model.observe_task(task_history_key(task),
+                                   task.t_end - task.t_start)
+            except Exception:
+                pass
 
     def _resolve(self, task: JobTask):
         with task.cb_lock:
@@ -576,6 +631,9 @@ class IJob:
         # streaming telemetry hook (docs/streaming.md): StreamTelemetry
         # .attach(job) installs a snapshot thunk here; stats() surfaces it
         self.stream: Optional[Callable[[], dict]] = None
+        # profiling hook (docs/profiling.md): JobTracer.attach(job) installs
+        # itself here; metrics()["profile"] and trace export read it
+        self.tracer = None
         self._t0 = time.perf_counter()
         with self.scheduler._lock:
             self.scheduler.stats["jobs_submitted"] += 1
@@ -681,11 +739,27 @@ class IJob:
         props = getattr(getattr(worker, "cluster", None), "props", None)
         if (task.group is not None and props is not None
                 and props.get_bool("ignis.task.speculative", False)):
-            timeout = props.get_float("ignis.task.speculative.timeout", 30.0)
+            raw = str(props.get("ignis.task.speculative.timeout", "30")).strip()
+            if raw.lower() == "auto":
+                # cost-derived deadline (docs/profiling.md §auto): factor x
+                # the typical observed duration of tasks with this task's
+                # structural signature, read at run time so the history the
+                # job has already accumulated informs its later tasks
+                factor = props.get_float("ignis.task.speculative.factor", 3.0)
+
+                def timeout_s(_t=task, _w=worker, _f=factor):
+                    model = getattr(_w.engine, "cost_model", None)
+                    if model is None:
+                        return 30.0
+                    return model.speculative_timeout_s(
+                        task_history_key(_t), factor=_f, default_s=30.0)
+            else:
+                fixed = props.get_float("ignis.task.speculative.timeout", 30.0)
+                timeout_s = lambda _fixed=fixed: _fixed
             # every speculative attempt runs on its own thread, so each must
             # re-bind the gang communicator (thread-locals don't cross spawns)
             return lambda node, memo: worker.engine.evaluate_speculative(
-                node, timeout_s=timeout, memo=memo,
+                node, timeout_s=timeout_s(), memo=memo,
                 bind=lambda: worker.use_group(task.group))
         return lambda node, memo: worker.engine.evaluate(node, memo=memo)
 
@@ -706,6 +780,7 @@ class IJob:
             return self._evaluator(_worker, _t)(_node, self._task_memo(_t))
 
         t.fn = fn
+        t.tracer = self.tracer
         self._node_tasks[node] = t
         self.tasks.append(t)
         self.scheduler.submit(t)
@@ -759,6 +834,7 @@ class IJob:
             return blocks_fn(blocks)
 
         t.fn = fn
+        t.tracer = self.tracer
         self.tasks.append(t)
         self.scheduler.submit(t)
         fut = IFuture(t)
@@ -786,6 +862,44 @@ class IJob:
         self._node_tasks.clear()
 
     def stats(self) -> dict:
+        """Deprecated facade over ``metrics()`` (docs/profiling.md):
+        the flat pre-PR-9 shape — task summary at the top level, the
+        ``coll`` subtree inline, ``stream`` when attached. Key names and
+        merged shapes are unchanged."""
+        warn_deprecated("IJob.stats()", "IJob.metrics()")
+        return {
+            **self._task_summary(),
+            # collective-engine telemetry (process-wide: persistent-plan
+            # cache + handles; docs/collectives.md) and this scheduler's
+            # handle settlement counters
+            "coll": self.metrics("coll"),
+            # per-tenant streaming/serving telemetry, when a StreamTelemetry
+            # is attached to this job (docs/streaming.md)
+            **({"stream": self.stream()} if self.stream is not None else {}),
+        }
+
+    def metrics(self, path: str | None = None) -> dict:
+        """The job's namespaced metrics tree (docs/profiling.md §metrics):
+        ``tasks/`` (this job's task-state summary), ``scheduler/`` (the
+        owning scheduler's counters), ``coll/`` (process-wide collective
+        engine + this scheduler's settlement counters — same shape as the
+        ``stats()["coll"]`` facade), plus ``stream/`` and ``profile/`` when
+        a StreamTelemetry or JobTracer is attached. ``path`` selects one
+        subtree (``metrics("coll")``)."""
+        tree = MetricsTree(
+            tasks=self._task_summary,
+            scheduler=self.scheduler.stats,
+            coll=lambda: {**comm.comm_stats(),
+                          "awaits": self.scheduler.stats["coll_awaits"],
+                          "flushed": self.scheduler.stats["coll_flushed"]},
+        )
+        if self.stream is not None:
+            tree.mount("stream", self.stream)
+        if self.tracer is not None:
+            tree.mount("profile", self.tracer.summary)
+        return tree.snapshot(path)
+
+    def _task_summary(self) -> dict:
         by_state: dict[str, int] = {}
         for t in self.tasks:
             by_state[t.state] = by_state.get(t.state, 0) + 1
@@ -803,15 +917,6 @@ class IJob:
             "failed": by_state.get(FAILED, 0),
             "workers": sorted({t.worker.name for t in self.tasks if t.worker}),
             "wall_ms": (time.perf_counter() - self._t0) * 1e3,
-            # collective-engine telemetry (process-wide: persistent-plan
-            # cache + handles; docs/collectives.md) and this scheduler's
-            # handle settlement counters
-            "coll": {**comm.comm_stats(),
-                     "awaits": self.scheduler.stats["coll_awaits"],
-                     "flushed": self.scheduler.stats["coll_flushed"]},
-            # per-tenant streaming/serving telemetry, when a StreamTelemetry
-            # is attached to this job (docs/streaming.md)
-            **({"stream": self.stream()} if self.stream is not None else {}),
         }
 
     def explain(self) -> str:

@@ -3,66 +3,225 @@
 Dict-like with defaults, validation and prefix views. Property keys follow
 the paper's naming (``ignis.executor.instances`` …) adapted to the TPU
 runtime (executors = mesh devices).
+
+Since PR 9 every property lives in a typed registry (``PropSpec``: name,
+type, default, validator, docstring — docs/properties.md). The runtime
+behaviour is deliberately forgiving, matching the paper's
+properties-file model:
+
+* setting an **unknown** ``ignis.*`` key warns once per key (a misspelt
+  scheduler knob should be loud, but third-party/app-private keys under
+  other prefixes pass silently);
+* setting an **invalid** value warns but stores it — consumers read with
+  the typed getters whose defaults absorb garbage, and subsystems that
+  must reject a value do so at use time (e.g. the streaming admission
+  controller on an unknown shed policy), never at assignment time;
+* ``validate()`` reports every current violation for tools and tests,
+  and ``tools/check_props.py`` gates that each registered property is
+  documented.
 """
 from __future__ import annotations
 
-DEFAULTS = {
-    "ignis.executor.image": "ignishpc/jax",
-    "ignis.executor.instances": "1",  # devices along the data axis
-    "ignis.executor.cores": "1",  # model-axis devices per executor
-    "ignis.executor.memory": "16GB",
-    "ignis.partition.type": "memory",  # memory | rawmemory | disk (paper §3.8)
-    "ignis.partition.compression": "6",
-    "ignis.partitions.per.executor": "1",
-    "ignis.driver.memory": "4GB",
-    "ignis.scheduler": "local",  # local | slurm-sim (launch/submit.py)
-    "ignis.mode": "ignis",  # ignis | spark  (spark = round-trip baseline)
-    "ignis.shuffle.capacity.factor": "2.0",
-    "ignis.shuffle.plan.cache.size": "64",  # compiled wide-stage LRU entries
-    "ignis.shuffle.memory.headroom": "1.25",  # capacity-memory fit margin
-    "ignis.join.max.matches": "8",
-    "ignis.transport.compression": "0",
-    # fault tolerance (docs/fault_tolerance.md): total scheduler attempts
-    # per job task (1 = never retry), and the gang-task straggler policy
-    # (speculative duplicate after the timeout, DagEngine.evaluate_speculative)
-    "ignis.task.attempts": "2",
-    "ignis.task.speculative": "false",
-    "ignis.task.speculative.timeout": "30",
-    "ignis.fusion.enabled": "true",  # stage compilation (DESIGN.md §5)
-    "ignis.fusion.plan.cache.size": "128",  # compiled-plan LRU entries
-    # kernel tier (docs/kernels.md): auto = compiled Pallas where the
-    # backend supports it, bit-identical plain-JAX fallback elsewhere;
-    # on / interpret / off force the choice (interpret = CI conformance)
-    "ignis.kernels": "auto",
-    "ignis.kernels.blocks": "128,256,512",  # autotune sweep candidates
-    "ignis.kernels.tune.cache.size": "512",  # autotune memo LRU entries
-    # streaming / multi-tenant serving (docs/streaming.md): micro-batch
-    # size, admission bounds (global in-flight cap, per-tenant quota,
-    # waiter queue depth), overload policy (block = backpressure, the only
-    # exactly-once-deterministic choice; shed = drop-and-count), commit
-    # interval between offset/state checkpoints (0 = no checkpointing),
-    # and the serve front door's request-queue bound
-    "ignis.stream.batch.rows": "256",
-    "ignis.stream.max.inflight": "8",
-    "ignis.stream.tenant.quota": "4",
-    "ignis.stream.queue.depth": "16",
-    "ignis.stream.shed.policy": "block",
-    "ignis.stream.checkpoint.interval": "0",
-    "ignis.serve.queue.depth": "64",
-}
+import warnings
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass(frozen=True)
+class PropSpec:
+    """One registered ``ignis.*`` property: its canonical string default,
+    declared type (for docs/tools — storage stays stringly, as in the
+    paper's properties files), optional validator (value → error string or
+    None), and a docstring surfaced by ``describe()`` and docs tooling."""
+
+    name: str
+    type: str  # int | float | bool | str | bytes | enum
+    default: str
+    doc: str
+    validator: Optional[Callable[[str], Optional[str]]] = None
+    choices: tuple = field(default=())
+
+    def check(self, value: str) -> Optional[str]:
+        """Error message for an invalid ``value``, else None."""
+        v = str(value).strip()
+        if self.choices and v.lower() not in self.choices:
+            return f"{self.name}={value!r}: expected one of {self.choices}"
+        if self.type == "int":
+            try:
+                int(v)
+            except ValueError:
+                return f"{self.name}={value!r}: expected an integer"
+        elif self.type == "float":
+            try:
+                float(v)
+            except ValueError:
+                return f"{self.name}={value!r}: expected a number"
+        elif self.type == "bool":
+            if v.lower() not in ("1", "0", "true", "false", "yes", "no",
+                                 "on", "off"):
+                return f"{self.name}={value!r}: expected a boolean"
+        elif self.type == "bytes":
+            s = v.upper()
+            for suf in ("GB", "MB", "KB", "B"):
+                if s.endswith(suf):
+                    s = s[: -len(suf)]
+                    break
+            try:
+                float(s)
+            except ValueError:
+                return f"{self.name}={value!r}: expected a size (e.g. 4GB)"
+        if self.validator is not None:
+            return self.validator(v)
+        return None
+
+
+REGISTRY: dict[str, PropSpec] = {}
+
+
+def register(name: str, type: str, default: str, doc: str,
+             validator=None, choices: tuple = ()) -> PropSpec:
+    spec = PropSpec(name, type, default, doc, validator,
+                    tuple(c.lower() for c in choices))
+    REGISTRY[name] = spec
+    return spec
+
+
+def _auto_or_float(v: str) -> Optional[str]:
+    if v.lower() == "auto":
+        return None
+    try:
+        float(v)
+    except ValueError:
+        return f"expected a number of seconds or 'auto', got {v!r}"
+    return None
+
+
+# -- cluster / executor shape (paper §3.4) ----------------------------------
+register("ignis.executor.image", "str", "ignishpc/jax",
+         "Container image name (cosmetic under the TPU runtime).")
+register("ignis.executor.instances", "int", "1",
+         "Devices along the data axis of the cluster mesh.")
+register("ignis.executor.cores", "int", "1",
+         "Model-axis devices per executor.")
+register("ignis.executor.memory", "bytes", "16GB",
+         "Per-executor memory budget for the capacity model.")
+register("ignis.driver.memory", "bytes", "4GB",
+         "Driver process memory budget.")
+register("ignis.partition.type", "str", "memory",
+         "Partition storage tier (paper §3.8).",
+         choices=("memory", "rawmemory", "disk"))
+register("ignis.partition.compression", "int", "6",
+         "zlib level for the disk partition tier.")
+register("ignis.partitions.per.executor", "int", "1",
+         "Default partition count multiplier per executor.")
+register("ignis.scheduler", "str", "local",
+         "Job scheduler backend (launch/submit.py).",
+         choices=("local", "slurm-sim"))
+register("ignis.mode", "str", "ignis",
+         "Execution mode: ignis, or spark for the round-trip baseline.",
+         choices=("ignis", "spark"))
+register("ignis.transport.compression", "int", "0",
+         "zlib level for inter-process transport framing.")
+
+# -- shuffle / join (DESIGN.md §6) ------------------------------------------
+register("ignis.shuffle.capacity.factor", "float", "2.0",
+         "Initial fan-out guess multiplier for the adaptive shuffle.")
+register("ignis.shuffle.plan.cache.size", "int", "64",
+         "Compiled wide-stage plan LRU entries.")
+register("ignis.shuffle.memory.headroom", "float", "1.25",
+         "Capacity-memory fit margin before overflow retry.")
+register("ignis.join.max.matches", "int", "8",
+         "Per-key match cap for the bounded join kernel.")
+
+# -- fault tolerance (docs/fault_tolerance.md) ------------------------------
+register("ignis.task.attempts", "int", "2",
+         "Total scheduler attempts per job task (1 = never retry).")
+register("ignis.task.speculative", "bool", "false",
+         "Duplicate straggling gang tasks after the speculative timeout.")
+register("ignis.task.speculative.timeout", "str", "30",
+         "Straggler deadline in seconds, or 'auto' to derive it from the "
+         "cost model's observed task history (docs/profiling.md §auto).",
+         validator=_auto_or_float)
+register("ignis.task.speculative.factor", "float", "3.0",
+         "With timeout=auto: deadline = factor x the typical observed "
+         "duration of tasks with the same signature.")
+
+# -- stage fusion / cost model (DESIGN.md §5, §13) --------------------------
+register("ignis.fusion.enabled", "bool", "true",
+         "Fuse maximal narrow chains into compiled stages.")
+register("ignis.fusion.mode", "str", "static",
+         "Fusion boundary policy: static fuses every eligible chain; cost "
+         "asks the cost model whether compiling a fused stage will pay for "
+         "itself (docs/profiling.md §fusion).",
+         choices=("static", "cost"))
+register("ignis.fusion.plan.cache.size", "int", "128",
+         "Compiled fused-stage plan LRU entries.")
+
+# -- kernel tier (docs/kernels.md) ------------------------------------------
+register("ignis.kernels", "str", "auto",
+         "Pallas kernel tier mode: auto picks compiled kernels where the "
+         "backend supports them; interpret forces CI conformance mode.",
+         choices=("auto", "on", "interpret", "off"))
+register("ignis.kernels.blocks", "str", "128,256,512",
+         "Autotune sweep block-size candidates (comma separated).")
+register("ignis.kernels.tune.cache.size", "int", "512",
+         "Autotune memo LRU entries.")
+
+# -- streaming / serving (docs/streaming.md) --------------------------------
+register("ignis.stream.batch.rows", "int", "256",
+         "Micro-batch size in rows.")
+register("ignis.stream.max.inflight", "int", "8",
+         "Global in-flight micro-batch cap.")
+register("ignis.stream.tenant.quota", "int", "4",
+         "Per-tenant in-flight micro-batch quota.")
+register("ignis.stream.queue.depth", "int", "16",
+         "Admission waiter queue depth.")
+register("ignis.stream.shed.policy", "str", "block",
+         "Overload policy: block applies backpressure (the only "
+         "exactly-once-deterministic choice); shed drops and counts.")
+register("ignis.stream.checkpoint.interval", "int", "0",
+         "Micro-batches between offset/state checkpoints (0 = off).")
+register("ignis.serve.queue.depth", "int", "64",
+         "Serve front-door request queue bound.")
+
+#: canonical {name: default} view of the registry — the pre-PR-9 module
+#: constant, kept because properties files and tests seed from it
+DEFAULTS = {name: spec.default for name, spec in REGISTRY.items()}
+
+_warned_keys: set[str] = set()
+
+
+def _warn_once(key: str, msg: str):
+    if key in _warned_keys:
+        return
+    _warned_keys.add(key)
+    warnings.warn(msg, stacklevel=3)
 
 
 class IProperties:
     def __init__(self, base: dict | None = None):
         self._kv = dict(DEFAULTS)
         if base:
-            self._kv.update(base)
+            for k, v in base.items():
+                self[k] = v
 
     def __getitem__(self, k):
         return self._kv[k]
 
     def __setitem__(self, k, v):
-        self._kv[str(k)] = str(v)
+        k, v = str(k), str(v)
+        spec = REGISTRY.get(k)
+        if spec is None:
+            if k.startswith("ignis."):
+                _warn_once(k, f"unknown property {k!r} — not in the ignis.* "
+                              f"registry (docs/properties.md); stored as-is")
+        else:
+            err = spec.check(v)
+            if err is not None:
+                # stored anyway: typed getters absorb garbage via their
+                # defaults, and use-time rejection stays with the subsystem
+                _warn_once(f"{k}={v}", f"invalid property value: {err}")
+        self._kv[k] = v
 
     def __contains__(self, k):
         return k in self._kv
@@ -99,7 +258,29 @@ class IProperties:
         return {k: v for k, v in self._kv.items() if k.startswith(prefix)}
 
     def copy(self) -> "IProperties":
-        return IProperties(dict(self._kv))
+        c = IProperties.__new__(IProperties)
+        c._kv = dict(self._kv)
+        return c
+
+    def validate(self) -> list[str]:
+        """Every current violation: invalid values of registered props and
+        unknown ``ignis.*`` keys. Reporting, not enforcement — see module
+        docstring for why assignment never raises."""
+        problems = []
+        for k, v in sorted(self._kv.items()):
+            spec = REGISTRY.get(k)
+            if spec is None:
+                if k.startswith("ignis."):
+                    problems.append(f"unknown property {k!r}")
+                continue
+            err = spec.check(v)
+            if err is not None:
+                problems.append(err)
+        return problems
+
+    def describe(self, k: str) -> Optional[PropSpec]:
+        """The registry spec for ``k`` (None when unregistered)."""
+        return REGISTRY.get(k)
 
     def __repr__(self):
         return f"IProperties({len(self._kv)} keys)"

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import comm, faults
 from repro.core import shuffle as sh
+from repro.core.metrics import Counters
 from repro.core.partition import Block, block_aval as _block_aval, block_devices, place_block
 from repro.kernels.registry import KernelRegistry, builtin_reduce_op
 
@@ -175,7 +176,9 @@ class ShuffleManager:
         # a lost `overflow_retries` increment could mask a regression) all
         # need their read-modify-write sequences kept atomic
         self._plan_lock = threading.Lock()
-        self.stats = {
+        # the "shuffle/" namespace of the worker's metrics tree
+        # (core/metrics.py; worker.shuffle_stats() is the legacy facade)
+        self.stats = Counters("shuffle", {
             "exchanges": 0,            # collective exchange stages executed
             "overflow_retries": 0,     # capacity retries (recompile + rerun)
             "fanout_retries": 0,       # join per-key match-bound doublings
@@ -187,7 +190,7 @@ class ShuffleManager:
             "wide_plan_evictions": 0,
             "bytes_moved": 0,          # exchanged-buffer bytes (estimate)
             "group_reshards": 0,       # blocks moved onto a different communicator
-        }
+        })
 
     # ------------------------------------------------------------------
     # communicator binding

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.metrics import Counters
+
 #: dtypes the kernel tier computes natively (bool rides as i32)
 SUPPORTED_DTYPES = ("float32", "int32")
 
@@ -162,12 +164,12 @@ class KernelRegistry:
         self._probe_cache: dict = {}
         self._tunes: "OrderedDict[tuple, int]" = OrderedDict()
         self._tuning: dict = {}  # key → Event while a sweep is in flight
-        self.stats = {
+        self.stats = Counters("kernels", {
             "kernel_hits": 0,        # wide nodes that ran kernel-backed
             "kernel_fallbacks": 0,   # kernel-eligible nodes on the jnp oracle
             "autotune_runs": 0,      # block-size sweeps performed
             "autotune_evictions": 0,
-        }
+        })
 
     def _bump(self, key: str, n: int = 1):
         with self._lock:

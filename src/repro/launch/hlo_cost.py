@@ -23,9 +23,15 @@ import re
 from dataclasses import dataclass, field
 
 _DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    # the fp8 family has grown spellings across XLA releases; all are 1 byte
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e8m0fnu": 1,
     "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    # sub-byte types round up: the parser prices HBM touches, and XLA packs
+    # them per-buffer, so 1 byte is the honest ceiling at this granularity
+    "s4": 1, "u4": 1, "s2": 1, "u2": 1, "f4e2m1fn": 1,
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
@@ -138,6 +144,14 @@ _CONST_INT_RE = re.compile(r"constant\((\d+)\)")
 _FREE_OPS = {
     "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
     "after-all", "partition-id", "replica-id", "iota", "copy-start", "copy-done",
+}
+
+# ops that move bytes but do no arithmetic — billing these 1 flop/elem (the
+# generic fallback) triple-counted e.g. a bf16 add lowered as
+# convert→add→convert; they cost HBM traffic only
+_MOVE_OPS = {
+    "convert", "broadcast", "reshape", "transpose", "slice", "concatenate",
+    "pad", "gather", "copy", "reverse", "reduce-precision",
 }
 
 
@@ -363,7 +377,7 @@ class HloModule:
             c.flops += self._dot_flops(ins, syms)
         elif op == "convolution":
             c.flops += 2.0 * shape_elems(ins.type_str)  # rough (none expected)
-        else:
+        elif op not in _MOVE_OPS:
             c.flops += shape_elems(ins.type_str)  # 1 flop/elem elementwise-ish
         return c
 

@@ -1,0 +1,18 @@
+"""repro.profile — profiling, cost modelling, and what-if replay
+(docs/profiling.md, DESIGN.md §13).
+
+The introspection-and-decision subsystem: ``JobTracer`` captures per-task
+phase spans (lock-wait / compute / collective-settle) and engine stage
+spans into Chrome-trace timelines; ``CostModel`` prices work statically
+(jaxpr / compiled HLO via launch/hlo_cost.py) and learns task-duration
+history; ``replay`` re-schedules a captured trace under hypothetical gang
+splits, placements, and speculative timeouts. The scheduler consumes the
+model for cost-aware fusion boundaries (``ignis.fusion.mode=cost``) and
+auto speculative timeouts (``ignis.task.speculative.timeout=auto``)."""
+from repro.profile.cost import CostEstimate, CostModel, DeviceParams  # noqa: F401
+from repro.profile.replay import (  # noqa: F401
+    Hypothesis, Schedule, Trace, TaskRecord, capture, predicted_vs_measured,
+    simulate,
+)
+from repro.profile.spans import Span, TraceBuffer, to_chrome, validate  # noqa: F401
+from repro.profile.tracer import JobTracer, task_lane  # noqa: F401

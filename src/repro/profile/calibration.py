@@ -1,0 +1,69 @@
+"""Calibrating DeviceParams against the machine actually running
+(docs/profiling.md §calibration).
+
+The static defaults in ``cost.DeviceParams`` are order-of-magnitude CPU
+figures; two cheap microprobes replace them with measured sustained rates
+(a square matmul for flops/s, an element-wise copy-scale for HBM bytes/s,
+a tiny jitted no-op loop for dispatch overhead), and ``fit_from_trace``
+closes the remaining gap by rescaling predictions against a captured
+trace's observed stage durations. Probes run on the default backend —
+the same place stage kernels execute — and take tens of milliseconds
+total at the default sizes."""
+from __future__ import annotations
+
+import time
+
+from repro.profile.cost import CostModel, DeviceParams
+
+
+def _time_best(fn, repeats: int = 3) -> float:
+    """Best-of-N wall time of ``fn()`` — best, not mean, because probe
+    noise is one-sided (GC, scheduler preemption only ever add time)."""
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def calibrate(n: int = 512, repeats: int = 3) -> DeviceParams:
+    """Measured DeviceParams for the current jax default backend."""
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.ones((n, n), jnp.float32)
+    b = jnp.ones((n, n), jnp.float32)
+
+    mm = jax.jit(lambda x, y: x @ y)
+    cp = jax.jit(lambda x: x * 2.0 + 1.0)
+    nop = jax.jit(lambda x: x)
+
+    # warm: exclude compile from the probes
+    mm(a, b).block_until_ready()
+    cp(a).block_until_ready()
+    nop(a).block_until_ready()
+
+    t_mm = _time_best(lambda: mm(a, b).block_until_ready(), repeats)
+    t_cp = _time_best(lambda: cp(a).block_until_ready(), repeats)
+    t_nop = _time_best(lambda: nop(a).block_until_ready(), repeats)
+
+    flops = 2.0 * n * n * n
+    # copy-scale touches in + out once each: 2 arrays of n*n f32
+    hbm_bytes = 2.0 * n * n * 4
+    return DeviceParams(
+        flops_per_s=max(1e6, flops / max(1e-9, t_mm - t_nop)),
+        hbm_bytes_per_s=max(1e6, hbm_bytes / max(1e-9, t_cp - t_nop)),
+        dispatch_s=max(1e-6, t_nop),
+    )
+
+
+def calibrated_model(n: int = 512, repeats: int = 3) -> CostModel:
+    return CostModel(calibrate(n, repeats))
+
+
+def fit_from_trace(model: CostModel, pairs) -> float:
+    """Rescale ``model`` so predictions match observed (predicted_s,
+    observed_s) pairs — thin alias of ``CostModel.fit`` kept here so the
+    calibration surface is one module."""
+    return model.fit(list(pairs))

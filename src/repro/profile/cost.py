@@ -1,0 +1,303 @@
+"""The cost model: price work before running it, learn from having run it
+(docs/profiling.md §cost, DESIGN.md §13).
+
+Two complementary halves share one object so scheduler decisions have a
+single thing to consult:
+
+* **static pricing** — walk a jaxpr (``price_jaxpr``, pre-execution: the
+  planner has tracers, not devices) or compiled HLO text (``price_hlo``,
+  exact post-lowering truth via the seed ``launch/hlo_cost.py`` parser)
+  into a ``CostEstimate`` (flops, HBM bytes, wire bytes, dispatches), then
+  convert to predicted seconds through ``DeviceParams`` — a roofline-style
+  max-of-terms is wrong here because the runtime interleaves phases, so
+  the model *sums* terms and lets calibration absorb overlap;
+* **dynamic history** — observed durations of tasks and stages keyed by
+  structural signature (``node_sig`` / ``FusedStage.signature``), the
+  empirical side that speculative-timeout derivation and fusion
+  amortisation read.
+
+Consumers in this PR: ``DagEngine.plan`` (cost-aware fusion boundaries,
+``ignis.fusion.mode=cost``) and ``IJob._evaluator`` (speculative timeouts,
+``ignis.task.speculative.timeout=auto``); the replay simulator prices
+hypothetical tasks it has no observation for.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+from collections import deque
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class DeviceParams:
+    """Sustained-rate device constants. Defaults are deliberately modest
+    host-CPU figures — CI runs on XLA:CPU; ``calibration.calibrate()``
+    replaces them with measured rates, and ``CostModel.fit`` rescales the
+    whole prediction against traced reality."""
+
+    flops_per_s: float = 5e10
+    hbm_bytes_per_s: float = 1e10
+    wire_bytes_per_s: float = 2e9
+    dispatch_s: float = 50e-6       # per eager/jit call overhead
+    compile_s_per_op: float = 8e-3  # XLA compile cost per fused operator
+
+
+@dataclass(frozen=True)
+class CostEstimate:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    dispatches: float = 0.0
+
+    def __add__(self, other: "CostEstimate") -> "CostEstimate":
+        return CostEstimate(
+            self.flops + other.flops,
+            self.hbm_bytes + other.hbm_bytes,
+            self.wire_bytes + other.wire_bytes,
+            self.dispatches + other.dispatches,
+        )
+
+    def scaled(self, k: float) -> "CostEstimate":
+        return CostEstimate(self.flops * k, self.hbm_bytes * k,
+                            self.wire_bytes * k, self.dispatches * k)
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        import numpy as np
+
+        n = 1
+        for d in aval.shape:
+            n *= int(d)
+        return n * np.dtype(aval.dtype).itemsize
+    except Exception:
+        return 0
+
+
+def _aval_elems(aval) -> int:
+    n = 1
+    for d in getattr(aval, "shape", ()):
+        n *= int(d)
+    return n
+
+
+def _dot_flops(eqn) -> float:
+    """2·batch·M·N·K for a dot_general from its dimension numbers."""
+    lhs, rhs = (v.aval for v in eqn.invars[:2])
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    batch = 1
+    for d in lb:
+        batch *= int(lhs.shape[d])
+    k = 1
+    for d in lc:
+        k *= int(lhs.shape[d])
+    m = 1
+    for i, d in enumerate(lhs.shape):
+        if i not in lc and i not in lb:
+            m *= int(d)
+    n = 1
+    for i, d in enumerate(rhs.shape):
+        if i not in rc and i not in rb:
+            n *= int(d)
+    return 2.0 * batch * m * n * k
+
+
+#: primitives that move/reshape data without arithmetic
+_FREE_PRIMS = frozenset((
+    "broadcast_in_dim", "reshape", "squeeze", "transpose", "convert_element_type",
+    "slice", "dynamic_slice", "dynamic_update_slice", "concatenate", "pad",
+    "gather", "scatter", "copy", "device_put", "stop_gradient", "iota",
+))
+
+
+class CostModel:
+    """See module docstring. Thread-safe: gang tasks consult one model from
+    several scheduler threads at once."""
+
+    def __init__(self, params: DeviceParams | None = None,
+                 history: int = 64):
+        self.params = params or DeviceParams()
+        self._scale = 1.0  # fit() multiplier applied to every prediction
+        self._lock = threading.Lock()
+        self._history = history
+        self._task_durs: dict = {}      # key -> deque[float seconds]
+        self._stage_sightings: dict = {}  # stage signature -> times planned
+        self.stats = {
+            "jaxprs_priced": 0,
+            "hlo_priced": 0,
+            "fuse_decisions": 0,
+            "fuse_deferrals": 0,
+            "auto_timeouts": 0,
+            "tasks_observed": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # static pricing
+    # ------------------------------------------------------------------
+    def price_jaxpr(self, jaxpr, nblocks: int = 1) -> CostEstimate:
+        """Price an (open or closed) jaxpr: flops from dot_generals plus one
+        flop per output element of every arithmetic primitive, HBM bytes as
+        operand+result traffic, one dispatch per equation (the un-jitted
+        eager execution shape — jitting collapses dispatches to 1, which is
+        exactly the delta the fusion policy prices). ``nblocks`` scales the
+        estimate across a node's block loop."""
+        inner = getattr(jaxpr, "jaxpr", jaxpr)
+        est = self._price_open_jaxpr(inner)
+        with self._lock:
+            self.stats["jaxprs_priced"] += 1
+        return est.scaled(nblocks)
+
+    def _price_open_jaxpr(self, jaxpr) -> CostEstimate:
+        flops = hbm = dispatches = 0.0
+        for eqn in jaxpr.eqns:
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if sub is not None:
+                inner = getattr(sub, "jaxpr", sub)
+                sub_est = self._price_open_jaxpr(inner)
+                mult = 1.0
+                if eqn.primitive.name in ("while", "scan"):
+                    mult = float(eqn.params.get("length", 1) or 1)
+                flops += sub_est.flops * mult
+                hbm += sub_est.hbm_bytes * mult
+                dispatches += sub_est.dispatches
+                continue
+            out_elems = sum(_aval_elems(v.aval) for v in eqn.outvars)
+            hbm += sum(_aval_bytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+            hbm += sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            dispatches += 1
+            name = eqn.primitive.name
+            if name == "dot_general":
+                flops += _dot_flops(eqn)
+            elif name not in _FREE_PRIMS:
+                flops += out_elems
+        return CostEstimate(flops, hbm, 0.0, dispatches)
+
+    def price_hlo(self, hlo_text: str, collective: bool = True) -> CostEstimate:
+        """Price compiled HLO text through the seed parser
+        (launch/hlo_cost.py): exact flops/HBM/wire accounting including
+        while-loop trip counts and fusion boundary buffers."""
+        from repro.launch.hlo_cost import analyze
+
+        a = analyze(hlo_text)
+        with self._lock:
+            self.stats["hlo_priced"] += 1
+        return CostEstimate(
+            flops=a["flops_per_device"],
+            hbm_bytes=a["hbm_bytes_per_device"],
+            wire_bytes=a["wire_bytes_per_device"] if collective else 0.0,
+            dispatches=1.0,
+        )
+
+    def price_fn(self, fn, *avals) -> CostEstimate:
+        """Price a python function by tracing it to a jaxpr on abstract
+        inputs (``jax.ShapeDtypeStruct`` — no device work)."""
+        import jax
+
+        return self.price_jaxpr(jax.make_jaxpr(fn)(*avals))
+
+    def predict_s(self, est: CostEstimate) -> float:
+        """Predicted wall seconds for an estimate — summed terms (see
+        module docstring), scaled by the ``fit()`` calibration factor."""
+        p = self.params
+        return self._scale * (
+            est.flops / p.flops_per_s
+            + est.hbm_bytes / p.hbm_bytes_per_s
+            + est.wire_bytes / p.wire_bytes_per_s
+            + est.dispatches * p.dispatch_s
+        )
+
+    def fit(self, pairs: list[tuple[float, float]]) -> float:
+        """Calibrate against (predicted_s, observed_s) pairs: the scale
+        becomes the median observed/predicted ratio (robust to a stray
+        straggler pair). Returns the new scale."""
+        ratios = [obs / pred for pred, obs in pairs if pred > 0 and obs > 0]
+        if ratios:
+            self._scale *= statistics.median(ratios)
+        return self._scale
+
+    def with_params(self, **kw) -> "CostModel":
+        m = CostModel(replace(self.params, **kw), history=self._history)
+        m._scale = self._scale
+        return m
+
+    # ------------------------------------------------------------------
+    # decision 1: cost-aware fusion boundaries (DagEngine.plan)
+    # ------------------------------------------------------------------
+    def should_fuse(self, signature, n_ops: int, nblocks: int = 1) -> bool:
+        """Is compiling this narrow chain into one fused stage worth it?
+
+        Fusing trades an XLA compile (``compile_s_per_op x n_ops``, paid
+        once per (signature, block-aval)) for saved dispatch overhead
+        (``(n_ops - 1) x nblocks`` fewer kernel launches per run). On the
+        FIRST sighting of a signature the compile is unamortised — fuse
+        only if this single run already saves more than the compile costs
+        (huge block counts). From the second sighting on, the plan cache
+        means the compile is sunk or amortising across repeats: always
+        fuse. This is the shape-churn asymmetry the static policy misses —
+        a pipeline that never repeats a stage signature pays compile after
+        compile for dispatch savings it never banks."""
+        p = self.params
+        with self._lock:
+            seen = self._stage_sightings.get(signature, 0)
+            self._stage_sightings[signature] = seen + 1
+            self.stats["fuse_decisions"] += 1
+            if seen > 0:
+                return True
+            saved = (max(0, n_ops - 1)) * max(1, nblocks) * p.dispatch_s
+            compile_cost = n_ops * p.compile_s_per_op
+            if saved >= compile_cost:
+                return True
+            self.stats["fuse_deferrals"] += 1
+            return False
+
+    def peek_fuse(self, signature) -> bool:
+        """``should_fuse`` without recording a sighting — for ``explain()``
+        and tests that must not perturb the decision state."""
+        with self._lock:
+            return self._stage_sightings.get(signature, 0) > 0
+
+    # ------------------------------------------------------------------
+    # decision 2: cost-derived speculative timeouts (IJob._evaluator)
+    # ------------------------------------------------------------------
+    def observe_task(self, key, dur_s: float):
+        """Record one observed task duration under a structural key —
+        typically ``(kind, node_sig(node))``."""
+        if dur_s < 0:
+            return
+        with self._lock:
+            q = self._task_durs.get(key)
+            if q is None:
+                q = self._task_durs[key] = deque(maxlen=self._history)
+            q.append(dur_s)
+            self.stats["tasks_observed"] += 1
+
+    def typical_s(self, key) -> float | None:
+        """Median observed duration for ``key`` (None with no history)."""
+        with self._lock:
+            q = self._task_durs.get(key)
+            if not q:
+                return None
+            return statistics.median(q)
+
+    def speculative_timeout_s(self, key, factor: float = 3.0,
+                              default_s: float = 30.0) -> float:
+        """The straggler deadline for a task: ``factor x`` its typical
+        observed duration, floored at 50 ms so scheduling jitter on
+        microsecond tasks cannot spawn duplicates, falling back to
+        ``default_s`` before any history exists."""
+        typical = self.typical_s(key)
+        with self._lock:
+            self.stats["auto_timeouts"] += 1
+        if typical is None:
+            return default_s
+        return max(0.05, factor * typical)
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {**self.stats,
+                    "scale": self._scale,
+                    "task_keys": len(self._task_durs),
+                    "stage_signatures": len(self._stage_sightings)}

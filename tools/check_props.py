@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Property-registry docs check: fail if a registered ``ignis.*`` property
+is missing from the documentation, or if docs/source reference an
+``ignis.*`` key the registry does not know.
+
+PR 9 consolidated configuration into a typed registry
+(``repro.core.properties.REGISTRY``); docs/properties.md is its
+human-readable mirror. This check keeps the two honest in both
+directions — runs in CI next to check_doc_links.py. A line that must
+reference an unknown key (the registry's own negative tests) opts out
+with a ``# props: ignore`` comment.
+
+Usage: python tools/check_props.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+_PROP = re.compile(r"\bignis\.[a-z][a-z0-9.]*[a-z0-9]\b")
+_SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+_DOC_FILES = ("docs/properties.md",)
+
+
+def registry(root: Path) -> dict:
+    sys.path.insert(0, str(root / "src"))
+    from repro.core.properties import REGISTRY
+
+    return REGISTRY
+
+
+def referenced_keys(root: Path):
+    """Yield (file, lineno, key) for every ignis.* token in source dirs."""
+    for d in _SCAN_DIRS:
+        for py in sorted((root / d).rglob("*.py")):
+            text = py.read_text(encoding="utf-8")
+            for lineno, line in enumerate(text.splitlines(), 1):
+                if "props: ignore" in line:
+                    continue  # negative tests reference unknown keys on purpose
+                for m in _PROP.finditer(line):
+                    yield py, lineno, m.group(0)
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parents[1]
+    reg = registry(root)
+    doc_text = "\n".join(
+        (root / f).read_text(encoding="utf-8")
+        for f in _DOC_FILES if (root / f).is_file()
+    )
+
+    problems = []
+
+    # 1. every registered property must appear in the docs
+    for name in sorted(reg):
+        if name not in doc_text:
+            problems.append(f"docs/properties.md: missing registered property {name!r}")
+
+    # 2. every ignis.* key referenced in source must be registered (or a
+    #    registered prefix — e.g. a docstring citing "ignis.stream.")
+    known = set(reg)
+    for src, lineno, key in referenced_keys(root):
+        if key in known:
+            continue
+        if any(k.startswith(key) for k in known):  # cited prefix of a family
+            continue
+        problems.append(
+            f"{src.relative_to(root)}:{lineno}: unregistered property {key!r}")
+
+    if problems:
+        print("Property registry violations:")
+        print("\n".join(f"  {p}" for p in problems))
+        return 1
+    print(f"property check OK ({len(reg)} registered props documented, "
+          f"all source references registered)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
