@@ -1,0 +1,135 @@
+"""Elastic resize cost (docs/elasticity.md): incremental reshard of the
+cached partitions vs the cold alternative — dropping the cache and
+recomputing it from lineage at the new world size.
+
+Two timed arms over one pipeline — an expensive persisted map of
+``blocks=8`` (64 chained transcendentals per element, so recomputing a
+block costs real FLOPs while moving it is one device_put):
+
+  * **incremental**: ``shrink(2)`` + action, ``grow(2)`` + action — the
+    resize re-pads and re-places the cached blocks (``reshard_moves``),
+    zero lineage evaluation;
+  * **cold**: the cached map is dropped before each resize — what
+    elasticity would cost without the incremental reshard (every block
+    recomputed from the source at the new world size).
+
+The derived factor is a per-iteration-interleaved ratio median (machine
+drift cancels, same protocol as bench_recovery):
+
+  * ``reshard_vs_cold`` (target ≥ 0.6) — a catastrophic-regression floor
+    only: moving cached blocks must not become slower than recomputing
+    them. At smoke sizes the arms are tens-of-ms quantities on shared
+    runners, so a tight floor would gate noise; the conformance tier
+    (tests/test_elastic.py) owns the EXACT ``recomputes == 0`` guarantee.
+
+The ``retries=``/``recompiles=`` counters in derived are the TIGHT gate
+(tools/check_bench.py): a resize that starts overflowing shuffles or
+recompiling plans regressed regardless of hardware.
+
+Needs 8 devices, so ``bench()`` re-executes this file in a subprocess with
+``--xla_force_host_platform_device_count=8`` (the flag must never leak into
+the caller — same isolation rule as tests/test_elastic.py).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def _child(n: int, iters: int) -> list:
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import row
+    from repro.core import ICluster, IProperties, IWorker
+
+    w = IWorker(ICluster(IProperties({"ignis.executor.instances": "8"})), "python")
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 2**31 - 1, n).astype(np.int32)
+
+    def heavy(x):
+        y = x.astype(jnp.float32) * jnp.float32(1e-9)
+        for _ in range(64):
+            y = jnp.sin(y) * jnp.float32(1.0001) + jnp.float32(0.1)
+        return (y * jnp.float32(1000)).astype(jnp.int32)
+
+    frame = w.parallelize(vals, blocks=8).map(heavy).persist()
+    oracle = frame.count()
+
+    def action():
+        assert frame.count() == oracle
+
+    def resize_pair(drop: bool) -> float:
+        t0 = time.perf_counter()
+        for step in ("shrink", "grow"):
+            if drop:
+                frame.node.result = None  # cold: no cache to reshard
+            (w.shrink if step == "shrink" else w.grow)(2)
+            action()
+        return time.perf_counter() - t0
+
+    # warm: compile the map at every capacity the resize cycle visits
+    # (capacity padding is monotonic and stabilises after one pair)
+    resize_pair(False)
+    resize_pair(True)
+
+    t_inc, t_cold, ratio = [], [], []
+    for _ in range(iters):
+        ti = resize_pair(False)
+        tc = resize_pair(True)
+        t_inc.append(ti)
+        t_cold.append(tc)
+        ratio.append(tc / ti)
+
+    med = lambda xs: sorted(xs)[len(xs) // 2]  # noqa: E731
+    st = w.shuffle_stats()
+    el = w.metrics("elastic")
+    return [
+        row("elastic_incremental", med(t_inc),
+            f"n={n} blocks=8 resize=shrink2+grow2 "
+            f"moves={el['reshard_moves']}"),
+        row("elastic_cold", med(t_cold),
+            "cache dropped before each resize: every block re-evaluated "
+            "from lineage at the new world size"),
+        row("elastic_reshard", 0.0,
+            f"reshard_vs_cold={med(ratio):.2f}x target=0.6 "
+            f"retries={st['overflow_retries']} "
+            f"recompiles={st['wide_plan_misses']}"),
+        row("elastic_integrity", 0.0,
+            f"reshard_recomputes={el['reshard_recomputes']} "
+            f"grows={el['grows']} shrinks={el['shrinks']} "
+            f"world={w.executors}"),
+    ]
+
+
+def bench(n: int = 200_000, iters: int = 5) -> list:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child", str(n), str(iters)],
+        env=env, capture_output=True, text=True, timeout=1200, cwd=root,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_elastic child failed:\n{r.stderr[-2000:]}")
+    rows = [ln[len("ROW "):] for ln in r.stdout.splitlines()
+            if ln.startswith("ROW ")]
+    if not rows:
+        raise RuntimeError(f"bench_elastic child emitted no rows:\n{r.stdout}")
+    return rows
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        n, iters = (int(x) for x in sys.argv[2:4])
+        for r in _child(n, iters):
+            print(f"ROW {r}")
+    else:
+        from benchmarks.common import emit
+
+        emit(bench())

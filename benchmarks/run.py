@@ -14,6 +14,8 @@
   §12 (ours) bench_streaming   multi-tenant micro-batch pumps vs sequential
   §13 (ours) bench_cost_model  replay accuracy on a gang trace, what-if
                                replay, cost-aware vs static fusion
+  §14 (ours) bench_elastic     resize cost: incremental reshard vs cold
+                               recompute of the cached partitions
   Table 5    bench_sloc        integration SLOC
   (ours)     roofline          §Roofline summary from the dry-run artifacts
 
@@ -44,6 +46,7 @@ SMOKE_KWARGS = {
     "kernels": {"n": 20_000, "iters": 3},
     "groups": {"size": 2048, "cg_iters": 1000, "n": 1 << 10, "iters": 3},
     "recovery": {"n": 20_000, "iters": 3},
+    "elastic": {"n": 20_000, "iters": 3},
     "streaming": {"tenants": 4, "batches": 24, "rows_per_batch": 16,
                   "iters": 2},
     "cost_model": {"n": 1 << 10, "chains": 4, "iters": 2, "gang_actions": 4},
@@ -64,6 +67,7 @@ BENCHES = [
     ("streaming", "benchmarks.bench_streaming"),
     ("cost_model", "benchmarks.bench_cost_model"),
     ("recovery", "benchmarks.bench_recovery"),
+    ("elastic", "benchmarks.bench_elastic"),
     ("sloc", "benchmarks.bench_sloc"),
     ("roofline", "benchmarks.roofline"),
 ]

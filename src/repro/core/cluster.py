@@ -22,7 +22,7 @@ from repro.core import compat
 from repro.core import faults
 from repro.core.context import IContext
 from repro.core.dag import DagEngine, TaskNode, node_sig
-from repro.core.metrics import MetricsTree, warn_deprecated
+from repro.core.metrics import Counters, MetricsTree, warn_deprecated
 from repro.core.shuffle_plan import ShuffleManager
 from repro.core.dataframe import IDataFrame
 from repro.core.native import get_app, load_library
@@ -144,11 +144,26 @@ class IWorker:
         # counter namespace mounted under one surface. `coll` is a thunk —
         # the collective engine is process-wide and snapshots under its own
         # lock. JobTracer.attach(worker=...) mounts `profile` here.
+        # elastic mesh telemetry (docs/elasticity.md): resize events and the
+        # incremental-reshard counter split — `reshard_moves` (blocks whose
+        # ownership changed, moved as pure data) vs `reshard_unchanged`
+        # (cached blocks a resize left in place) vs `reshard_recomputes`
+        # (blocks LOST mid-move — elastic.reshard faults — handed back to
+        # block-wise lineage repair; 0 on every clean resize)
+        self.elastic_stats = Counters("elastic", {
+            "grows": 0,
+            "shrinks": 0,
+            "world_size": self._base_context.executors,
+            "reshard_moves": 0,
+            "reshard_unchanged": 0,
+            "reshard_recomputes": 0,
+        })
         self._metrics = MetricsTree(
             stages=self.engine.stats,
             shuffle=self.shuffle.stats,
             kernels=self.shuffle.kernels.stats,
             coll=comm_mod.comm_stats,
+            elastic=self.elastic_stats,
         )
         # job-scheduler serialisation points (core/job.py): the base lock
         # covers the whole worker; gang-scheduled tasks instead hold one
@@ -163,8 +178,14 @@ class IWorker:
         from collections import OrderedDict
 
         self._group_locks: "OrderedDict[int, tuple]" = OrderedDict()
-        self._groups: dict[int, list[IContext]] = {}
+        # n_groups → (base context the split was built from, groups): the
+        # base reference is the world-identity the cache revalidates against
+        # — a grow/shrink swaps _base_context, so stale sub-mesh splits are
+        # rebuilt on next use instead of surviving the resize
+        self._groups: dict[int, tuple] = {}
         self._groups_guard = threading.Lock()
+        # serialises grow/shrink against each other (drain handles jobs)
+        self._resize_lock = threading.RLock()
         # fault tolerance (docs/fault_tolerance.md): executors reported lost
         # (containers the resource manager reclaimed) and the registry of
         # cached nodes whose blocks a lost executor takes with it. WeakSet:
@@ -214,12 +235,21 @@ class IWorker:
         correct and caches are locked — just oversubscribed;
         docs/collectives.md)."""
         with self._groups_guard:
-            gs = self._groups.get(n_groups)
-            if gs is None:
+            entry = self._groups.get(n_groups)
+            # revalidate against the CURRENT world, not just the blacklist:
+            # a grow/shrink swaps _base_context, and a split built over the
+            # old world would otherwise keep handing out stale sub-meshes
+            # (docs/elasticity.md; the pre-elastic bug kept them forever)
+            if entry is not None and entry[0] is not self._base_context:
+                for g in entry[1]:
+                    self._group_locks.pop(id(g), None)
+                entry = None
+            if entry is None:
                 gs = self._base_context.split(n_groups)
-                self._groups[n_groups] = gs
+                entry = self._groups[n_groups] = (self._base_context, gs)
                 for g in gs:
                     self._group_locks[id(g)] = (g, threading.RLock(), True)
+            gs = entry[1]
             # the cache must not bypass the executor blacklist: a split built
             # before a kill_executor would otherwise keep handing out groups
             # over the lost rank while a fresh split raises. The cache itself
@@ -249,6 +279,116 @@ class IWorker:
                             del self._group_locks[key]
                             break
             return entry[1]
+
+    # ------------------------------------------------------------------
+    # elastic mesh: runtime grow/shrink (docs/elasticity.md, DESIGN.md §14)
+    # ------------------------------------------------------------------
+    def _world_devices(self) -> list:
+        devs = np.asarray(self._base_context.mesh.devices)
+        if devs.ndim != 1:
+            raise ValueError(
+                "elastic resize supports 1-D data meshes only "
+                f"(this worker's mesh has axes {self._base_context.mesh.axis_names})")
+        return list(devs.flat)
+
+    def grow(self, n: int = 1) -> int:
+        """Admit ``n`` executor ranks at runtime: in-flight tasks drain on
+        the old communicator, the base context rebinds a mesh extended with
+        ``n`` free devices, and cached partitions reshard incrementally
+        (docs/elasticity.md). Returns the new world size."""
+        if n < 1:
+            raise ValueError(f"grow() needs n >= 1, got {n}")
+        with self._resize_lock:
+            cur = self._world_devices()
+            have = {d.id for d in cur}
+            pool = [d for d in jax.devices() if d.id not in have]
+            if len(pool) < n:
+                raise ValueError(
+                    f"grow({n}): only {len(pool)} free device(s) beyond the "
+                    f"current {len(cur)}-executor world")
+            return self._resize(cur + pool[:n])
+
+    def shrink(self, ranks) -> int:
+        """Retire executor ranks at runtime: ``shrink(2)`` retires the two
+        highest ranks, ``shrink([1, 3])`` retires exactly those ranks. At
+        least one rank must survive. Cached blocks owned by retired devices
+        move onto the survivors (incremental reshard — pure data movement,
+        no lineage recompute). Returns the new world size."""
+        with self._resize_lock:
+            cur = self._world_devices()
+            if isinstance(ranks, int):
+                if ranks < 1:
+                    raise ValueError(f"shrink() needs >= 1 rank, got {ranks}")
+                ranks = range(len(cur) - ranks, len(cur))
+            retire = sorted({int(r) for r in ranks})
+            if not retire:
+                raise ValueError("shrink() needs at least one rank")
+            bad = [r for r in retire if not 0 <= r < len(cur)]
+            if bad:
+                raise ValueError(
+                    f"shrink() ranks {bad} out of range for {len(cur)} executors")
+            if len(retire) >= len(cur):
+                raise ValueError(
+                    f"shrink({retire}) would retire the whole {len(cur)}-rank "
+                    f"world; at least one executor must survive")
+            gone = set(retire)
+            return self._resize([d for i, d in enumerate(cur) if i not in gone])
+
+    def _resize(self, new_devices: list) -> int:
+        """Swap the base communicator onto ``new_devices`` under a full
+        drain: the worker job lock plus every pinned group lock (the
+        ``groups()`` splits gang tasks serialise on) are held, so in-flight
+        tasks finish on the OLD communicator and later submissions bind the
+        resized mesh via ``worker.context``. Ad-hoc caller-built groups are
+        not drained — the same tolerated oversubscription as group-lock
+        eviction (DESIGN.md §8); their tasks keep computing on their own
+        (stale but intact) sub-meshes. Call from a driver thread that holds
+        no job locks."""
+        old = self._base_context
+        with self._groups_guard:
+            drain = [lock for (_c, lock, pinned) in self._group_locks.values()
+                     if pinned]
+        held = []
+        self._job_lock.acquire()
+        held.append(self._job_lock)
+        for lk in drain:
+            lk.acquire()
+            held.append(lk)
+        try:
+            old_devs = self._world_devices()
+            old_world = frozenset(old_devs)
+            new_ctx = IContext(
+                compat.make_mesh_of(np.asarray(new_devices),
+                                    old.mesh.axis_names),
+                old.axis, self.cluster.props, self)
+            new_ctx._vars = dict(old._vars)
+            self._base_context = new_ctx
+            # the blacklist is rank-indexed: re-key it by device identity
+            # (a blacklisted rank whose device was retired is simply gone)
+            dev_rank = {d: i for i, d in enumerate(new_devices)}
+            self.executor_blacklist = {
+                dev_rank[old_devs[r]] for r in self.executor_blacklist
+                if r < len(old_devs) and old_devs[r] in dev_rank}
+            # cached splits of the old world are stale; groups() also
+            # revalidates by base identity, this just frees the locks now
+            with self._groups_guard:
+                for _base, gs in self._groups.values():
+                    for g in gs:
+                        self._group_locks.pop(id(g), None)
+                self._groups.clear()
+            from repro.distributed.elastic import reshard_cached
+
+            moves, kept, recomputes = reshard_cached(self, old_world, new_ctx)
+            st = self.elastic_stats
+            st["grows" if len(new_devices) > len(old_devs) else "shrinks"] += 1
+            st["world_size"] = len(new_devices)
+            st["reshard_moves"] += moves
+            st["reshard_unchanged"] += kept
+            st["reshard_recomputes"] += recomputes
+            return len(new_devices)
+        finally:
+            for lk in reversed(held):
+                lk.release()
 
     # ------------------------------------------------------------------
     # executor failure (paper §3.5: container loss + blacklist)

@@ -49,6 +49,13 @@ Injection sites (threaded through the runtime):
   ``stream.admit``    an admission decision (``streaming/admission.py``):
                       ``tenant``. NOT a task fault — an injected failure
                       forces a ``shed`` decision (counted, never retried).
+  ``elastic.reshard`` one incremental block move during a mesh resize
+                      (``distributed/elastic.py`` ``reshard_cached``,
+                      docs/elasticity.md): ``op``, ``block``. NOT retried in
+                      place — an injected failure models the block lost in
+                      flight: it becomes a lineage hole (counted as an
+                      elastic ``reshard_recompute``) and the next action
+                      repairs it block-wise, exactly like an executor kill.
   ==================  =====================================================
 
 Rules match a site plus a subset of the info keys; string values match via
@@ -186,6 +193,16 @@ class FaultPlan:
         shed — overload as a policy outcome, not an error (no retry)."""
         return self.fail("stream.admit", tenant=tenant, attempt=None,
                          times=times)
+
+    def fail_elastic_reshard(self, op: str = "*", block=None,
+                             times: Optional[int] = 1) -> "FaultPlan":
+        """Lose a cached block mid-move during a mesh resize: the resize
+        completes, the block becomes a lineage hole, and the next action
+        repairs it block-wise (docs/elasticity.md — no task retry here)."""
+        match = {"op": op}
+        if block is not None:
+            match["block"] = block
+        return self.fail("elastic.reshard", attempt=None, times=times, **match)
 
     def delay_task(self, name: str, seconds: float, attempt: int = 0) -> "FaultPlan":
         """Straggle a job task: sleep before its k-th scheduler attempt."""

@@ -241,6 +241,16 @@ class JobScheduler:
         })
 
     # ------------------------------------------------------------------
+    def queue_depth(self) -> int:
+        """Submitted-but-unresolved task count — the autoscaling signal
+        (``ElasticPolicy.poll``, docs/elasticity.md): sustained depth above
+        ``ignis.elastic.queue.per.executor`` × world size asks for ranks."""
+        with self._lock:
+            return (self.stats["tasks_submitted"]
+                    - self.stats["tasks_completed"]
+                    - self.stats["tasks_failed"])
+
+    # ------------------------------------------------------------------
     def _ensure_pool(self):
         with self._lock:
             if self._pool is None:

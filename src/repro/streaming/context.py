@@ -134,19 +134,42 @@ class StreamContext:
         self.state = _np_copy(tree["state"])
         self._restored_from = step
 
-    def _checkpoint(self):
+    def _checkpoint(self, crash: bool = False):
         """Cut a checkpoint at a quiesce point: callers drain in-flight
         batches first, so (offset, committed, state) are mutually
-        consistent — restoring replays nothing and skips nothing."""
+        consistent — restoring replays nothing and skips nothing.
+        ``crash=True`` skips the quiesce assert: in-order commits keep
+        (offset, committed, state) consistent after EVERY commit, so the
+        committed prefix is a valid checkpoint even with a failed batch
+        still in flight — it will be replayed from the source on restart."""
         from repro import checkpoint as ck
 
-        assert not self._pending, "checkpoint requires a quiesced pump"
+        assert crash or not self._pending, "checkpoint requires a quiesced pump"
         os.makedirs(self.ckpt_dir, exist_ok=True)
         ck.save(self.ckpt_dir, self.committed, self._ckpt_tree(), keep=3)
         # the job memo pinned every evaluated micro-batch subgraph; state is
         # durable now, so release it — the streaming analogue of
         # lineage truncation at a checkpoint (docs/fault_tolerance.md)
         self.job.release()
+
+    def _drain_then_checkpoint(self):
+        """Drain to a quiesce point and cut the checkpoint. If a batch
+        failure aborts the drain, cut a crash checkpoint of the committed
+        prefix BEFORE propagating: without it, a fault landing on a batch
+        that was pipelined behind the checkpoint trigger would abort the
+        pump with NO checkpoint at all, and the restart would replay the
+        whole stream instead of resuming from the last commit (the restart
+        stays exactly-once either way — this bounds replay work, and makes
+        ``restored_from`` deterministic for the chaos tier)."""
+        try:
+            self.drain()
+        except BaseException:
+            try:
+                self._checkpoint(crash=True)
+            except Exception:
+                pass  # best-effort: the original abort must propagate
+            raise
+        self._checkpoint()
 
     @property
     def restored_from(self) -> Optional[int]:
@@ -203,8 +226,7 @@ class StreamContext:
             self.tenant, (time.perf_counter() - head.t_submit) * 1e3, replays)
         if (self.ckpt_dir is not None and self.ckpt_interval > 0
                 and self.committed % self.ckpt_interval == 0):
-            self.drain()
-            self._checkpoint()
+            self._drain_then_checkpoint()
         return True
 
     def _commit_ready(self):
@@ -247,9 +269,10 @@ class StreamContext:
                 self._apply_shed(next_offset)
                 continue
             self._submit_batch(rows, next_offset)
-        self.drain()
         if self.ckpt_dir is not None and self.ckpt_interval > 0:
-            self._checkpoint()
+            self._drain_then_checkpoint()
+        else:
+            self.drain()
         return self.state
 
     def _apply_shed(self, next_offset: int):

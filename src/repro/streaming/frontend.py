@@ -23,10 +23,16 @@ from repro.streaming.telemetry import StreamTelemetry
 class TenantFrontEnd:
     def __init__(self, worker, *, n_groups: int = 1, name: str = "tenants",
                  props=None, admission: Optional[AdmissionController] = None,
-                 telemetry: Optional[StreamTelemetry] = None):
+                 telemetry: Optional[StreamTelemetry] = None, elastic=None):
         self.worker = worker
         self.name = name
         self.props = props if props is not None else worker.cluster.props
+        # autoscaling hook (docs/elasticity.md): an ElasticPolicy here is
+        # notified on every admit — tenants arrive, the mesh follows. The
+        # front end's gang groups stay as built (pumps pin their group for
+        # life); the grown ranks serve WORLD-communicator work and the next
+        # front end built at the new size.
+        self.elastic = elastic
         self.groups = worker.groups(n_groups) if n_groups > 1 else [None]
         self.job = IJob(name)
         self.admission = admission or AdmissionController(self.props)
@@ -41,6 +47,8 @@ class TenantFrontEnd:
         its pump. The pump shares the front end's job/admission/telemetry."""
         if tenant in self._streams:
             raise ValueError(f"tenant {tenant!r} already admitted")
+        if self.elastic is not None:
+            self.elastic.on_admit(len(self._streams) + 1)
         group = self.groups[self._next_group % len(self.groups)]
         self._next_group += 1
         sc = StreamContext(

@@ -465,6 +465,26 @@ def main():
           and js["stream"]["completed"] == 46
           and js["stream"]["inflight"] == 0)
 
+    # ---- elastic mesh: grow/shrink under cached partitions ----------------
+    # compact cross-check of the dedicated tier (tests/_elastic_main.py,
+    # DESIGN.md §14): a cached frame survives shrink(2)+grow(2) bit-identically
+    # with zero lineage recomputes — resharding is pure data movement
+    we = IWorker(ICluster(IProperties({"ignis.executor.instances": "8"})),
+                 "python")
+    dfe = we.parallelize(np.arange(4096, dtype=np.int32)).map(
+        lambda x: x * 3 + 1).persist()
+    oracle_e = [int(x) for x in dfe.collect()]
+    we.shrink(2)
+    mid = [int(x) for x in dfe.collect()]
+    we.grow(2)
+    es = we.metrics("elastic")
+    check("p8_elastic_resize_bit_identical",
+          mid == oracle_e and [int(x) for x in dfe.collect()] == oracle_e)
+    check("p8_elastic_zero_recomputes",
+          es["reshard_recomputes"] == 0 and es["reshard_moves"] > 0
+          and es["grows"] == 1 and es["shrinks"] == 1
+          and es["world_size"] == 8 and dfe.node.compute_count == 1)
+
     print("ALL_DISTRIBUTED_OK")
 
 

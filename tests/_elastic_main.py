@@ -1,0 +1,305 @@
+"""Elasticity conformance tier at p=8 (docs/elasticity.md) — run in a
+subprocess with 8 host devices (tests/test_elastic.py drives this; the XLA
+flag must precede the jax import and must NOT leak into the main pytest
+process).
+
+The matrix: every action kind (narrow / fused / wide across all shuffle
+kinds / native / action) evaluated across a grow(2) and a shrink(2) must be
+bit-identical to the static-mesh oracle, with EXACT ``reshard_moves``
+counters and zero recomputes on unaffected cached partitions. Plus: live
+jobs spanning a resize, groups-cache revalidation, shuffle capacity memory
+across world sizes, seeded random join/leave sequences against a pure-numpy
+oracle, and shape-changing ``restore_elastic``.
+"""
+import os
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import ICluster, IProperties, IWorker  # noqa: E402
+from repro.core.job import IJob  # noqa: E402
+from repro.core.partition import block_devices  # noqa: E402
+from repro.distributed.elastic import ElasticPolicy, restore_elastic  # noqa: E402
+
+
+def check(name, ok):
+    print(f"{name}: {'OK' if ok else 'FAIL'}")
+    if not ok:
+        raise SystemExit(1)
+
+
+def canon(df):
+    return sorted(map(repr, df.collect()))
+
+
+def native_scale(ctx, data, valid):
+    return data * jnp.int32(2), valid
+
+
+def build_frames(w, vals):
+    fr = {
+        "src": w.parallelize(vals),
+        "kv_l": w.parallelize(np.arange(256, dtype=np.int32)),
+        "kv_r": w.parallelize(np.arange(64, dtype=np.int32)),
+    }
+    fr["mapped"] = fr["src"].map(lambda x: x * np.int32(3) ^ np.int32(5)).persist()
+    fr["mapped"].count()  # materialise the persisted cache pre-resize
+    return fr
+
+
+def run_matrix(w, fr):
+    """One result per action kind, canonicalized mesh-independently."""
+    out = {}
+    out["narrow"] = canon(fr["src"].map(lambda x: x + np.int32(9)))
+    out["fused"] = canon(
+        fr["src"].map(lambda x: x * np.int32(2))
+        .map(lambda x: x - np.int32(3)).filter(lambda x: x % 3 == 0))
+    out["wide_sort"] = [int(x) for x in fr["mapped"].sort().collect()]
+    out["wide_distinct"] = canon(fr["src"].map(lambda x: x % 17).distinct())
+    out["wide_reduceByKey"] = canon(
+        fr["src"].map(lambda x: {"key": x % 13, "value": jnp.int32(1)})
+        .reduce_by_key(lambda a, b: a + b, 0))
+    gk = fr["kv_l"].map(lambda x: {"key": x % 7, "value": x}).group_by_key(
+        group_capacity=64)
+    out["wide_groupByKey"] = sorted(
+        (int(np.asarray(r["key"])),
+         tuple(sorted(int(v) for v, m in
+                      zip(np.asarray(r["value"]["items"]),
+                          np.asarray(r["value"]["mask"])) if m)))
+        for r in gk.collect())
+    out["wide_partitionBy"] = sorted(
+        int(np.asarray(r["value"])) for r in
+        fr["kv_l"].map(lambda x: {"key": x % 5, "value": x})
+        .partition_by().collect())
+    out["wide_join"] = sorted(
+        (int(np.asarray(x["key"])), int(np.asarray(x["value"][0])),
+         int(np.asarray(x["value"][1])))
+        for x in fr["kv_l"].map(lambda x: {"key": x % 8, "value": x})
+        .join(fr["kv_r"].map(lambda x: {"key": x % 8, "value": x * 2}))
+        .collect())
+    out["native"] = [int(x) for x in w.call(native_scale, fr["mapped"]).collect()]
+    out["action_count"] = fr["mapped"].count()
+    out["action_take"] = [int(x) for x in fr["src"].take(5)]
+    return out
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 100000, 4096).astype(np.int32)
+
+    # ---- conformance matrix across grow(2) + shrink(2) ---------------------
+    w = IWorker(ICluster(IProperties({"ignis.executor.instances": "4"})), "python")
+    fr = build_frames(w, vals)
+    # one group-pinned cached partition: the "unaffected" case — resident
+    # wholly on surviving sub-group devices, it must never move
+    gvals = np.arange(128, dtype=np.int32)
+    with w.use_group(w.groups(2)[0]):
+        gframe = w.parallelize(gvals)
+        g_oracle = canon(gframe.map(lambda x: x * np.int32(7)))
+    gs4 = w.groups(2)
+    g_devs0 = block_devices(gframe.node.result[0])
+
+    oracle = run_matrix(w, fr)  # static world-4 oracle
+    world_blocks = 4  # src + mapped + kv_l + kv_r (one block each)
+    eng0 = w.metrics("stages")["block_recomputes"]
+    mapped_cc = fr["mapped"].node.compute_count
+
+    check("p8_grow_returns_world", w.grow(2) == 6 and w.executors == 6)
+    st = w.metrics("elastic")
+    check("p8_grow_exact_counters",
+          st["grows"] == 1 and st["world_size"] == 6
+          and st["reshard_moves"] == world_blocks
+          and st["reshard_unchanged"] == 1
+          and st["reshard_recomputes"] == 0)
+    check("p8_grow_unaffected_partition_not_moved",
+          block_devices(gframe.node.result[0]) == g_devs0)
+
+    post_grow = run_matrix(w, fr)
+    for kind in oracle:
+        check(f"p8_grow_bit_identical_{kind}", post_grow[kind] == oracle[kind])
+    check("p8_grow_zero_recomputes",
+          w.metrics("stages")["block_recomputes"] == eng0
+          and fr["mapped"].node.compute_count == mapped_cc)
+
+    # new submissions bind the resized mesh
+    src6 = w.parallelize(vals[:512])
+    check("p8_new_submission_binds_grown_mesh",
+          block_devices(src6.node.result[0])
+          == frozenset(w.context.mesh.devices.flat)
+          and len(block_devices(src6.node.result[0])) == 6)
+
+    # groups-cache revalidation: the cached split must rebuild for the new
+    # world instead of handing out stale 4-rank sub-meshes
+    gs6 = w.groups(2)
+    check("p8_groups_revalidate_after_grow",
+          gs6[0] is not gs4[0]
+          and [g.group_ranks for g in gs6] == [(0, 1, 2), (3, 4, 5)])
+
+    check("p8_shrink_returns_world", w.shrink(2) == 4 and w.executors == 4)
+    st = w.metrics("elastic")
+    check("p8_shrink_exact_counters",
+          st["shrinks"] == 1 and st["world_size"] == 4
+          and st["reshard_moves"] == 2 * world_blocks + 1  # + src6's block
+          and st["reshard_unchanged"] == 2
+          and st["reshard_recomputes"] == 0)
+
+    post_shrink = run_matrix(w, fr)
+    for kind in oracle:
+        check(f"p8_shrink_bit_identical_{kind}", post_shrink[kind] == oracle[kind])
+    check("p8_shrink_zero_recomputes",
+          w.metrics("stages")["block_recomputes"] == eng0)
+
+    # the group-pinned partition still evaluates identically under the
+    # re-split world
+    with w.use_group(w.groups(2)[0]):
+        check("p8_group_frame_survives_resizes",
+              canon(gframe.map(lambda x: x * np.int32(7))) == g_oracle)
+
+    # ---- a live job spans grow(2) then shrink(2) ---------------------------
+    job = IJob("elastic-live")
+    f1 = fr["mapped"].count_async(job=job)
+    check("p8_live_job_grow", w.grow(2) == 6)   # drains f1 on the old comm
+    f2 = fr["mapped"].count_async(job=job)
+    f3 = fr["mapped"].sort().count_async(job=job)
+    check("p8_live_job_shrink", w.shrink(2) == 4)
+    f4 = fr["mapped"].count_async(job=job)
+    check("p8_live_job_results_bit_identical",
+          f1.result() == oracle["action_count"]
+          and f2.result() == oracle["action_count"]
+          and f3.result() == oracle["action_count"]
+          and f4.result() == oracle["action_count"])
+    check("p8_live_job_no_failed_tasks", job.metrics("tasks")["failed"] == 0)
+
+    # ---- shuffle capacity memory is keyed per communicator size ------------
+    fr["mapped"].sort().count()  # warm the memo for the post-resize capacity
+    sh0 = w.metrics("shuffle")
+    fr["mapped"].sort().count()  # same world, same capacity: pure memo hit
+    sh1 = w.metrics("shuffle")
+    check("p8_capacity_memo_hit_same_world",
+          sh1["capacity_memory_hits"] > sh0["capacity_memory_hits"]
+          and sh1["capacity_memory_misses"] == sh0["capacity_memory_misses"])
+    w.grow(1)  # world 5: same lineage, NEW capacity key at p=5
+    fr["mapped"].sort().count()
+    sh2 = w.metrics("shuffle")
+    check("p8_capacity_memo_miss_new_world",
+          sh2["capacity_memory_misses"] > sh1["capacity_memory_misses"])
+    fr["mapped"].sort().count()
+    sh3 = w.metrics("shuffle")
+    check("p8_capacity_memo_hit_after_resize",
+          sh3["capacity_memory_hits"] > sh2["capacity_memory_hits"]
+          and sh3["capacity_memory_misses"] == sh2["capacity_memory_misses"]
+          and sh3["overflow_retries"] == sh0["overflow_retries"])
+    w.shrink(1)
+
+    # ---- ElasticPolicy: queue-driven autoscaling on a live worker ----------
+    w.cluster.props["ignis.elastic.enabled"] = "true"
+    w.cluster.props["ignis.elastic.step"] = "2"
+    w.cluster.props["ignis.elastic.cooldown.polls"] = "2"
+    w.cluster.props["ignis.elastic.queue.per.executor"] = "4"
+    pol = ElasticPolicy(w)
+    check("p8_policy_cooldown_holds", pol.poll(queue_depth=32) == 0)
+    check("p8_policy_grow_step_clamped",
+          pol.poll(queue_depth=32) == 2 and w.executors == 6)
+    check("p8_policy_idle_shrink",
+          pol.poll(queue_depth=0) == 0 and pol.poll(queue_depth=0) == -2
+          and w.executors == 4)
+    check("p8_policy_results_still_identical",
+          fr["mapped"].sort().count() == oracle["action_count"])
+
+    # ---- seeded random join/leave sequences vs pure-numpy oracle -----------
+    narrow_ops = [
+        (lambda df: df.map(lambda x: x * np.int32(3)),
+         lambda a: a * 3),
+        (lambda df: df.map(lambda x: x + np.int32(11)),
+         lambda a: a + 11),
+        (lambda df: df.map(lambda x: x ^ np.int32(0x55)),
+         lambda a: a ^ 0x55),
+        (lambda df: df.filter(lambda x: x % 2 == 0),
+         lambda a: a[a % 2 == 0]),
+    ]
+    for seed in (0, 1, 2):
+        w2 = IWorker(ICluster(IProperties({"ignis.executor.instances": "4"})),
+                     "python")
+        base = np.random.default_rng(100 + seed).integers(
+            0, 5000, 1536).astype(np.int32)
+        src2 = w2.parallelize(base)
+        r2 = np.random.default_rng(seed)
+        ok = True
+        for _step in range(6):
+            frame, arr = src2, base.copy()
+            for _ in range(int(r2.integers(1, 5))):  # 1–4-op chain
+                k = int(r2.integers(0, len(narrow_ops)))
+                frame = narrow_ops[k][0](frame)
+                arr = narrow_ops[k][1](arr)
+            if r2.integers(0, 2):  # wide terminal half the time
+                ok = ok and [int(x) for x in frame.sort().collect()] \
+                    == sorted(int(v) for v in arr)
+            else:
+                ok = ok and frame.count() == len(arr)
+            p = w2.executors
+            if p <= 2:
+                w2.grow(int(r2.integers(1, 3)))
+            elif p >= 7:
+                w2.shrink(int(r2.integers(1, 3)))
+            elif r2.integers(0, 2):
+                w2.grow(int(r2.integers(1, min(3, 8 - p + 1))))
+            else:
+                w2.shrink(int(r2.integers(1, min(3, p))))
+        st2 = w2.metrics("elastic")
+        check(f"p8_random_join_leave_seed{seed}",
+              ok and st2["reshard_recomputes"] == 0
+              and st2["grows"] + st2["shrinks"] == 6
+              and w2.metrics("stages")["block_recomputes"] == 0)
+
+    # ---- restore_elastic: shape-changing restores (8→4, 4→8, rejection) ----
+    from repro.checkpoint import save
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+
+    cfg = get_config("olmo-1b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(1))
+    flat = jax.tree.leaves(params)
+
+    def same(tree):
+        return all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(flat, jax.tree.leaves(tree)))
+
+    with tempfile.TemporaryDirectory() as td:
+        mesh8 = make_local_mesh(8, 1)
+        save(td, 1, {"params": jax.device_put(params)})
+        out4 = restore_elastic(td, 1, cfg, make_local_mesh(4, 1),
+                               {"params": params})
+        check("p8_restore_elastic_8to4", same(out4["params"]))
+        save(td, 2, {"params": out4["params"]})  # saved from the 4-way world
+        out8 = restore_elastic(td, 2, cfg, mesh8, {"params": params})
+        check("p8_restore_elastic_4to8", same(out8["params"]))
+        # uneven divisibility: specs degrade to replication, values exact
+        out5 = restore_elastic(td, 2, cfg, make_local_mesh(5, 1),
+                               {"params": params})
+        check("p8_restore_elastic_uneven_world", same(out5["params"]))
+        # rejection: a target whose shapes disagree with the manifest
+        bad = jax.tree.map(lambda x: x[..., : max(1, x.shape[-1] // 2)], params)
+        try:
+            restore_elastic(td, 2, cfg, mesh8, {"params": bad})
+            check("p8_restore_elastic_shape_rejected", False)
+        except ValueError:
+            check("p8_restore_elastic_shape_rejected", True)
+        # policy-wired restore places onto the worker's CURRENT mesh
+        out_w = pol.restore(td, 2, cfg, {"params": params})
+        check("p8_policy_restore_on_live_mesh",
+              same(out_w["params"])
+              and all(frozenset(leaf.sharding.device_set)
+                      <= frozenset(w.context.mesh.devices.flat)
+                      for leaf in jax.tree.leaves(out_w["params"])))
+
+    print("ALL_ELASTIC_OK")
+
+
+if __name__ == "__main__":
+    main()

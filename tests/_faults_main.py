@@ -368,13 +368,113 @@ def main():
             died = True
     sc2 = ck_stream("ck")
     st2 = sc2.run()
+    # restored_from is EXACTLY the aborted pump's committed count: the
+    # crash checkpoint cut on the drain-abort path pins it even when the
+    # doomed batch was pipelined behind the checkpoint trigger (this was
+    # a race — restored_from could be None — before _drain_then_checkpoint)
     check("p8_stream_ckpt_restart_bit_identical",
-          died and sc2.restored_from is not None
+          died and sc2.restored_from == 4
           and bool((st2 == ck_oracle).all())
           and sc2.committed == 6 and sc2.offset == 96)
     check("p8_stream_ckpt_restart_exact_counters",
           retries() - r0c == 1 and plan_c.injections("stream.batch") == 2
           and sc2.batches_replayed == 0)
+
+    # ---- elastic-mesh chaos (docs/elasticity.md) ---------------------------
+    # a rank's block lost mid-reshard degrades to a lineage hole repaired
+    # block-wise on the next action: EXACT counter split — 1 reshard
+    # recompute, 1 engine block recompute, everything else moved intact
+    we = IWorker(ICluster(IProperties({"ignis.executor.instances": "4"})),
+                 "python")
+    vals_e = rng.integers(0, 50_000, 1024).astype(np.int32)
+    dfe = we.parallelize(vals_e, blocks=4).map(lambda x: x * 5).persist()
+    oracle_el = sorted(int(x) for x in dfe.collect())
+    base_el = we.engine.stats["block_recomputes"]
+    r0e = retries()
+    plan_el = FaultPlan().fail_elastic_reshard(op="map", block=2)
+    with faults.inject(plan_el):
+        we.grow(2)
+    st_el = we.metrics("elastic")
+    check("p8_elastic_reshard_fault_counters",
+          plan_el.injections("elastic.reshard") == 1
+          and st_el["reshard_recomputes"] == 1
+          and st_el["reshard_moves"] == 7  # 8 blocks, 1 lost, 0 kept
+          and dfe.node.result[2] is None)
+    check("p8_elastic_reshard_fault_repaired",
+          sorted(int(x) for x in dfe.collect()) == oracle_el
+          and we.engine.stats["block_recomputes"] - base_el == 1
+          and retries() - r0e == 0)  # repair is lineage, not task retry
+
+    # a shrink issued while a gang task is mid-flight must BLOCK on the
+    # pinned group lock until the task drains on the old communicator —
+    # the result is bit-identical, no retries, the world resized after
+    import threading
+    import time
+
+    wg = IWorker(ICluster(IProperties({"ignis.executor.instances": "8"})),
+                 "python")
+    gg0, _gg1 = wg.groups(2)
+    dfg = wg.parallelize(vals_e, blocks=2).map(lambda x: x + 9)
+    oracle_g = sorted(int(x) for x in dfg.collect())
+    dfg2 = wg.parallelize(vals_e, blocks=2).map(lambda x: x + 9)
+    r0g = retries()
+    with faults.inject(FaultPlan().delay_block(op="map", block=0,
+                                               seconds=1.5)):
+        futg = dfg2.collect_async(job=IJob("gang-shrink", group=gg0))
+        time.sleep(0.3)  # let the straggler take the group lock
+        t0 = time.monotonic()
+        wg.shrink(2)     # drains the in-flight gang task first
+        drained = time.monotonic() - t0
+        got_g = sorted(int(x) for x in futg.result(120))
+    check("p8_elastic_shrink_mid_gang_task",
+          got_g == oracle_g and wg.executors == 6
+          and drained >= 0.5 and retries() - r0g == 0)
+
+    # ranks join AND leave mid-streaming-pump, with one micro-batch killed
+    # while the mesh is in motion: folded states bit-identical to the
+    # static solo oracle, EXACT retry/replay counters (1 retry, 1 replay)
+    wp = IWorker(ICluster(IProperties({
+        "ignis.executor.instances": "6",
+        "ignis.stream.batch.rows": "16"})), "python")
+
+    def pump_run(tag, resize=False, plan=None):
+        fe = TenantFrontEnd(wp, n_groups=2, name=f"elastic-{tag}")
+        for i in range(2):
+            fe.admit(f"e{i}", TenantRequestSource(i, seed=13, limit=96),
+                     init_state=zeros())
+        stop = threading.Thread()
+        sizes = []
+        if resize:
+            def resizer():
+                while fe.job.metrics("stream")["completed"] < 3:
+                    time.sleep(0.005)
+                sizes.append(wp.grow(2))
+                while fe.job.metrics("stream")["completed"] < 7:
+                    time.sleep(0.005)
+                sizes.append(wp.shrink(2))
+            stop = threading.Thread(target=resizer, daemon=True)
+            stop.start()
+        if plan is not None:
+            with faults.inject(plan):
+                out = fe.run()
+        else:
+            out = fe.run()
+        if stop.ident is not None:
+            stop.join(60)
+        return fe, out, sizes
+
+    _, pump_oracle, _ = pump_run("oracle")
+    r0p = retries()
+    plan_p = FaultPlan().fail_stream_batch(tenant="e1", batch=2)
+    fe_p, pump_got, sizes = pump_run("chaos", resize=True, plan=plan_p)
+    check("p8_elastic_resize_mid_pump_bit_identical",
+          all(bool((pump_got[t] == pump_oracle[t]).all())
+              for t in pump_oracle)
+          and sizes == [8, 6] and wp.executors == 6)
+    check("p8_elastic_resize_mid_pump_exact_counters",
+          retries() - r0p == 1 and plan_p.injections("stream.batch") == 1
+          and fe_p.stream("e1").batches_replayed == 1
+          and wp.metrics("elastic")["reshard_recomputes"] == 0)
 
     print("ALL_FAULTS_OK")
 

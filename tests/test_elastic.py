@@ -1,0 +1,321 @@
+"""Elastic mesh (docs/elasticity.md): the p=8 conformance tier runs in a
+subprocess (tests/_elastic_main.py — the 8-device host-platform flag must
+never leak into this process); here live the single-device pieces — resize
+validation, the groups-cache revalidation regression, the pure reshard
+planner/mover units, the ``ignis.elastic.*`` property surface, the
+``elastic.reshard`` fault-plan sugar, and hypothesis property tests pitting
+``ElasticPolicy``/``plan_reshard`` against pure-Python oracles."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ICluster, IProperties, IWorker, faults
+from repro.core.faults import FaultPlan
+from repro.core.partition import Block, block_devices
+from repro.core.properties import REGISTRY
+from repro.distributed.elastic import (
+    ElasticPolicy, plan_reshard, repad_block, restore_elastic)
+
+
+@pytest.mark.timeout(900)
+def test_elastic_suite():
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), env.get("PYTHONPATH", "")]
+    )
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(here, "_elastic_main.py")],
+        env=env, capture_output=True, text=True, timeout=880,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "ALL_ELASTIC_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# resize validation at p=1 (a single-device world can neither grow — no free
+# devices — nor shrink below one survivor)
+# ---------------------------------------------------------------------------
+
+def _worker():
+    return IWorker(ICluster(IProperties()), "python")
+
+
+def test_grow_without_free_devices_raises():
+    w = _worker()
+    with pytest.raises(ValueError, match="free device"):
+        w.grow(len(jax.devices()))  # every visible device is already ranked
+
+
+def test_grow_rejects_nonpositive():
+    w = _worker()
+    with pytest.raises(ValueError):
+        w.grow(0)
+
+
+def test_shrink_validation():
+    w = _worker()
+    with pytest.raises(ValueError):
+        w.shrink(w.executors)  # would leave zero survivors
+    with pytest.raises(ValueError):
+        w.shrink([99])  # rank out of range
+    with pytest.raises(ValueError):
+        w.shrink([])
+
+
+def test_resize_same_world_rebuilds_context():
+    """Degenerate resize: same device list still swaps the base context,
+    re-spreads world partitions, and bumps the counters consistently."""
+    w = _worker()
+    df = w.parallelize(np.arange(16, dtype=np.int32)).persist()
+    assert df.count() == 16
+    old_ctx = w._base_context
+    assert w._resize(w._world_devices()) == w.executors
+    assert w._base_context is not old_ctx
+    st = w.metrics("elastic")
+    assert st["reshard_moves"] > 0 and st["reshard_recomputes"] == 0
+    assert sorted(int(x) for x in df.collect()) == list(range(16))
+
+
+def test_groups_cache_revalidates_on_new_base_context():
+    """Regression: the groups(n) cache used to revalidate only against the
+    executor blacklist, so a resize would keep handing out sub-meshes of the
+    RETIRED world. It must rebuild whenever the base context changed."""
+    w = _worker()
+    gs = w.groups(1)
+    assert w.groups(1)[0] is gs[0]  # cached while the world stands still
+    w._resize(w._world_devices())   # new base context, same world
+    gs2 = w.groups(1)
+    assert gs2[0] is not gs[0]
+    assert gs2[0].parent is w._base_context
+
+
+# ---------------------------------------------------------------------------
+# the pure planner/mover units
+# ---------------------------------------------------------------------------
+
+def test_plan_reshard_rules():
+    old = frozenset({0, 1, 2, 3})
+    grown = frozenset({0, 1, 2, 3, 4, 5})
+    shrunk = frozenset({0, 1})
+    # uncommitted blocks always move
+    assert plan_reshard(None, old, grown) == "move"
+    # world-bound partitions re-spread on ANY resize
+    assert plan_reshard(old, old, grown) == "move"
+    assert plan_reshard(old, old, shrunk) == "move"
+    # a block touching a retired device moves
+    assert plan_reshard(frozenset({2, 3}), old, shrunk) == "move"
+    # a block outside the new world moves
+    assert plan_reshard(frozenset({7}), old, grown) == "move"
+    # resident wholly on a surviving strict sub-group: unaffected
+    assert plan_reshard(frozenset({0, 1}), old, grown) == "keep"
+    assert plan_reshard(frozenset({0, 1}), old, shrunk) == "keep"
+
+
+def test_repad_block_preserves_rows():
+    w = _worker()
+    df = w.parallelize(np.arange(10, dtype=np.int32))
+    blk = df.node.result[0]
+    out = repad_block(blk, 4, w.context.mesh, w.context.axis)
+    assert isinstance(out, Block)
+    assert out.capacity % 4 == 0 and out.capacity >= blk.capacity
+    valid = np.asarray(out.valid)
+    assert valid.sum() == 10
+    assert np.array_equal(np.asarray(out.data)[valid], np.arange(10))
+    assert block_devices(out) == frozenset(w.context.mesh.devices.flat)
+
+
+# ---------------------------------------------------------------------------
+# property surface + fault-plan sugar
+# ---------------------------------------------------------------------------
+
+def test_elastic_props_registered():
+    for key, typ in [
+        ("ignis.elastic.enabled", "bool"),
+        ("ignis.elastic.min.executors", "int"),
+        ("ignis.elastic.max.executors", "int"),
+        ("ignis.elastic.step", "int"),
+        ("ignis.elastic.queue.per.executor", "int"),
+        ("ignis.elastic.cooldown.polls", "int"),
+    ]:
+        assert key in REGISTRY and REGISTRY[key].type == typ
+    p = IProperties()
+    assert p.get_bool("ignis.elastic.enabled", False) is False
+    p["ignis.elastic.step"] = "3"
+    assert p.get_int("ignis.elastic.step") == 3
+
+
+def test_fail_elastic_reshard_sugar():
+    plan = FaultPlan().fail_elastic_reshard(op="map", block=2)
+    with faults.inject(plan):
+        faults.check("elastic.reshard", op="sort", block=2)  # op mismatch
+        faults.check("elastic.reshard", op="map", block=1)   # block mismatch
+        with pytest.raises(faults.FaultInjected):
+            faults.check("elastic.reshard", op="map", block=2)
+        faults.check("elastic.reshard", op="map", block=2)   # times=1 spent
+    assert plan.injections("elastic.reshard") == 1
+
+
+# ---------------------------------------------------------------------------
+# ElasticPolicy on a single-device world: decisions, clamps, disabled mode
+# ---------------------------------------------------------------------------
+
+def _props(**kv):
+    return IProperties({f"ignis.elastic.{k.replace('_', '.')}": str(v)
+                        for k, v in kv.items()})
+
+
+def test_policy_disabled_records_denied():
+    w = _worker()
+    pol = ElasticPolicy(w, props=_props(enabled="false", max_executors=8))
+    assert pol.poll(queue_depth=10_000) == 0
+    assert w.executors == 1
+    assert pol.stats["denied"] == 1
+    assert pol.on_admit(8) == 0 and pol.stats["denied"] == 2
+
+
+def test_policy_desired_clamps():
+    w = _worker()
+    pol = ElasticPolicy(w, props=_props(
+        enabled="true", min_executors=2, max_executors=6,
+        queue_per_executor=4))
+    assert pol.desired(0) == 2        # floor
+    assert pol.desired(12) == 3       # ceil(12/4)
+    assert pol.desired(10_000) == 6   # ceiling
+    assert pol.desired(-5) == 2       # negative depth clamps to floor
+
+
+def test_policy_reads_scheduler_queue_depth():
+    w = _worker()
+    df = w.parallelize(np.arange(8, dtype=np.int32))
+    assert df.count() == 8  # settled work: depth back to zero
+    pol = ElasticPolicy(w, props=_props(enabled="false"))
+    assert pol.scheduler().queue_depth() == 0
+    assert pol.poll() == 0  # holds steady at desired == min == current
+
+
+def test_policy_restore_single_device(tmp_path):
+    from repro.checkpoint import save
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("olmo-1b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    save(str(tmp_path), 1, {"params": params})
+    w = _worker()
+    pol = ElasticPolicy(w, props=_props(enabled="false"))
+    out = pol.restore(str(tmp_path), 1, cfg, {"params": params})
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out["params"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_elastic_rejects_shape_mismatch(tmp_path):
+    from repro.checkpoint import save
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+
+    cfg = get_config("olmo-1b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    save(str(tmp_path), 1, {"params": params})
+    bad = jax.tree.map(lambda x: x[..., : max(1, x.shape[-1] // 2)], params)
+    with pytest.raises(ValueError, match="checkpoint"):
+        restore_elastic(str(tmp_path), 1, cfg, make_local_mesh(1, 1),
+                        {"params": bad})
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: the policy state machine and the reshard planner vs oracles
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover - dev-only dependency
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    _settings = settings(max_examples=25, deadline=None,
+                         suppress_health_check=list(HealthCheck))
+
+    class _FakeWorker:
+        """A mesh-free stand-in: ElasticPolicy only reads ``executors`` and
+        calls ``grow``/``shrink`` — the state machine is what's under test."""
+
+        def __init__(self, p):
+            self.executors = p
+
+        def grow(self, n):
+            self.executors += n
+            return self.executors
+
+        def shrink(self, n):
+            self.executors -= n
+            return self.executors
+
+    @given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 3),
+           st.integers(1, 8),
+           st.lists(st.integers(0, 200), min_size=1, max_size=30))
+    @_settings
+    def test_policy_matches_pure_oracle(p0, step, cooldown, queue_per, depths):
+        lo, hi = 1, 8
+        props = _props(enabled="true", min_executors=lo, max_executors=hi,
+                       step=step, cooldown_polls=cooldown,
+                       queue_per_executor=queue_per)
+        fw = _FakeWorker(p0)
+        pol = ElasticPolicy(fw, props=props)
+        # the oracle: the documented state machine, written independently
+        p, direction, streak = p0, 0, 0
+        for depth in depths:
+            want = max(lo, min(hi, -(-max(0, depth) // queue_per)))
+            d = (want > p) - (want < p)
+            if d != direction:
+                direction, streak = d, 0
+            streak += 1
+            expect = 0
+            if d != 0 and streak >= cooldown:
+                streak = 0
+                expect = max(-step, min(step, want - p))
+                p += expect
+            got = pol.poll(queue_depth=depth)
+            assert got == expect
+            assert fw.executors == p
+            assert lo <= fw.executors <= hi
+            assert abs(got) <= step
+
+    @given(st.integers(1, 6), st.integers(1, 8), st.integers(1, 8))
+    @_settings
+    def test_policy_on_admit_matches_oracle(p0, tenants, mx):
+        lo = 1
+        hi = max(mx, lo)
+        fw = _FakeWorker(p0)
+        pol = ElasticPolicy(fw, props=_props(
+            enabled="true", min_executors=lo, max_executors=hi))
+        target = max(lo, min(hi, tenants))
+        expect = max(0, target - p0)
+        assert pol.on_admit(tenants) == expect
+        assert fw.executors == max(p0, target)
+
+    _devsets = st.sets(st.integers(0, 9), max_size=8).map(frozenset)
+
+    @given(_devsets, _devsets,
+           st.one_of(st.none(), _devsets.filter(lambda s: s)))
+    @_settings
+    def test_plan_reshard_invariants(old_world, new_world, devs):
+        plan = plan_reshard(devs, old_world, new_world)
+        assert plan in ("move", "keep")
+        if plan == "keep":
+            # a kept block is committed, inside the surviving world, off
+            # every retired device, and not bound to the full old world
+            assert devs is not None
+            assert devs <= new_world
+            assert not (devs & (old_world - new_world))
+            assert devs != old_world
+        if devs is None or devs == old_world or not (devs <= new_world):
+            assert plan == "move"
